@@ -1,0 +1,94 @@
+"""Benchmark harnesses mirroring the paper's tables/figures.
+
+Fig. 3  in-memory GPU-kernel time per app x platform x variant
+Fig. 6  oversubscribed GPU-kernel time (explicit = N/A)
+Fig. 4/7 breakdowns (compute / fault stall / HtoD / DtoH) for traced apps
+Tab. I  working-set sizes per regime
+
+All cells run through the calibrated UM simulator (core/simulator.py);
+numeric correctness of each app's real JAX implementation is covered by
+tests/test_umbench_numeric.py.
+"""
+from __future__ import annotations
+
+from repro.core.simulator import GB
+from repro.umbench.harness import REGIMES, run_cell, run_matrix, speedup_vs_um
+from repro.umbench.platforms import PLATFORMS
+
+APPS = ("bs", "cublas", "cg", "graph500", "conv0", "conv1", "conv2", "fdtd3d")
+PLATS = ("intel-pascal-pcie", "intel-volta-pcie", "p9-volta-nvlink")
+VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
+
+
+def table_fig3_in_memory() -> list[str]:
+    rows = ["table,app,platform,variant,total_s,derived"]
+    for plat in PLATS:
+        for app in APPS:
+            for variant in VARIANTS:
+                cell = run_cell(app, PLATFORMS[plat], variant, "in_memory")
+                t = "NA" if cell.total_s is None else f"{cell.total_s:.4f}"
+                rows.append(f"fig3,{app},{plat},{variant},{t},in_memory")
+    return rows
+
+
+def table_fig6_oversubscribed() -> list[str]:
+    rows = ["table,app,platform,variant,total_s,derived"]
+    for plat in PLATS:
+        for app in APPS:
+            for variant in VARIANTS:
+                cell = run_cell(app, PLATFORMS[plat], variant, "oversubscribed")
+                t = "NA" if cell.total_s is None else f"{cell.total_s:.4f}"
+                rows.append(f"fig6,{app},{plat},{variant},{t},oversubscribed")
+    return rows
+
+
+def table_fig4_7_breakdowns() -> list[str]:
+    """Traced apps (BS, CG, FDTD3d) stacked-bar decomposition."""
+    rows = ["table,app,platform,regime,variant,compute_s,fault_stall_s,htod_s,dtoh_s"]
+    for app in ("bs", "cg", "fdtd3d"):
+        for plat in ("intel-pascal-pcie", "p9-volta-nvlink"):
+            for regime in ("in_memory", "oversubscribed"):
+                for variant in ("um", "um_advise", "um_prefetch", "um_both"):
+                    r = run_cell(app, PLATFORMS[plat], variant, regime).report
+                    rows.append(
+                        f"fig4_7,{app},{plat},{regime},{variant},"
+                        f"{r.compute_s:.4f},{r.fault_stall_s:.4f},"
+                        f"{r.htod_s:.4f},{r.dtoh_s:.4f}"
+                    )
+    return rows
+
+
+def table_claims_summary() -> list[str]:
+    """The paper's five headline claims as measured speedups vs basic UM."""
+    sp = speedup_vs_um(run_matrix())
+    rows = ["table,claim,measured,expectation"]
+    rows.append(
+        "claims,intel_oversub_advise_bs,"
+        f"{sp[('bs','intel-volta-pcie','oversubscribed','um_advise')]:.2f}x,"
+        ">=1.1x (paper: up to 25%)")
+    rows.append(
+        "claims,p9_inmem_advise_cg,"
+        f"{sp[('cg','p9-volta-nvlink','in_memory','um_advise')]:.2f}x,"
+        ">=1.3x (paper: up to 34%+)")
+    rows.append(
+        "claims,p9_oversub_advise_bs,"
+        f"{sp[('bs','p9-volta-nvlink','oversubscribed','um_advise')]:.2f}x,"
+        "<=0.5x (paper: ~3x degradation)")
+    rows.append(
+        "claims,intel_inmem_prefetch_cg,"
+        f"{sp[('cg','intel-volta-pcie','in_memory','um_prefetch')]:.2f}x,"
+        ">=1.5x (paper: up to 50%)")
+    p9 = sp[("cg", "p9-volta-nvlink", "in_memory", "um_prefetch")]
+    rows.append(
+        f"claims,p9_inmem_prefetch_cg,{p9:.2f}x,"
+        "< intel (paper: little benefit on P9)")
+    return rows
+
+
+def table_working_sets() -> list[str]:
+    rows = ["table,platform,regime,working_set_gb"]
+    for plat in PLATS:
+        p = PLATFORMS[plat]
+        for regime, frac in REGIMES.items():
+            rows.append(f"table1,{plat},{regime},{frac * p.device_mem_gb:.2f}")
+    return rows

@@ -1,0 +1,65 @@
+"""Roofline table (EXPERIMENTS.md §Roofline) — reads artifacts/dryrun/*.json
+produced by launch/dryrun.py and renders the per-cell three-term analysis."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path("artifacts/dryrun")
+
+
+def load_records(mesh: str | None = "16x16") -> list[dict]:
+    recs = []
+    if not ARTIFACTS.exists():
+        return recs
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh is not None and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_rows(mesh: str = "16x16") -> list[str]:
+    rows = [
+        "table,arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+        "bound,model_tflops,useful_ratio,mfu_roofline,perdev_gb"
+    ]
+    for r in load_records(mesh):
+        if r["status"] == "skipped":
+            rows.append(
+                f"roofline,{r['arch']},{r['shape']},{r['mesh']},skipped,"
+                f"-,-,-,-,-,-,-,-")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            rows.append(
+                f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                f"{r['status']},-,-,-,-,-,-,-,-")
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        perdev = mem.get("peak_extra_gb", 0) + mem.get("argument_gb", 0)
+        rows.append(
+            f"roofline,{r['arch']},{r['shape']},{r['mesh']},ok,"
+            f"{ro['compute_s']:.3f},{ro['memory_s']:.3f},"
+            f"{ro['collective_s']:.3f},{ro['bound']},"
+            f"{ro['model_flops_total'] / 1e12:.1f},"
+            f"{ro['useful_flops_ratio']:.3f},{ro['mfu_at_roofline']:.4f},"
+            f"{perdev:.2f}"
+        )
+    return rows
+
+
+def dryrun_rows() -> list[str]:
+    """§Dry-run summary: compile status + per-device bytes, both meshes."""
+    rows = ["table,arch,shape,mesh,status,perdev_gb,compile_s,collective_ops"]
+    for r in load_records(mesh=None):
+        mem = r.get("memory_analysis", {})
+        perdev = mem.get("peak_extra_gb", 0) + mem.get("argument_gb", 0)
+        colls = r.get("collectives_raw", {}).get("counts", {})
+        rows.append(
+            f"dryrun,{r['arch']},{r['shape']},{r['mesh']},{r['status']},"
+            f"{perdev:.2f},{r.get('compile_s', '-')},"
+            f"{sum(colls.values()) if colls else '-'}"
+        )
+    return rows

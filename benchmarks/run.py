@@ -1,0 +1,42 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark entry point:  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits, as CSV blocks:
+  fig3/fig6     the paper's in-memory/oversubscribed tables (simulated UM)
+  fig4_7        traced-app breakdowns (compute/stall/HtoD/DtoH)
+  claims        headline-claim summary vs paper expectations
+  table1        working-set sizing
+  lm            per-arch reduced train/decode step timings (real CPU)
+  kernel        Pallas-kernel call timings (interpret mode) vs jnp oracle
+  roofline      §Roofline terms per (arch x shape) from dry-run artifacts
+  dryrun        §Dry-run compile/memory summary, both meshes
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import lm_bench, paper_tables, roofline
+
+    blocks: list[list[str]] = [
+        paper_tables.table_claims_summary(),
+        paper_tables.table_working_sets(),
+        paper_tables.table_fig3_in_memory(),
+        paper_tables.table_fig6_oversubscribed(),
+        paper_tables.table_fig4_7_breakdowns(),
+    ]
+    if not fast:
+        blocks.append(lm_bench.kernel_rows())
+        blocks.append(lm_bench.arch_step_rows())
+    blocks.append(roofline.roofline_rows())
+    blocks.append(roofline.dryrun_rows())
+    for block in blocks:
+        for line in block:
+            print(line)
+        print()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,9 @@
+"""Batched serving example: prefill + decode across architecture families
+(GQA dense, MoE+SWA ring cache, RWKV recurrent state, multi-codebook audio).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import serve
+
+for arch in ("qwen2-7b", "mixtral-8x22b", "rwkv6-3b", "musicgen-medium"):
+    serve(arch, batch=2, prompt_len=32, gen=12)

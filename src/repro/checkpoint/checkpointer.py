@@ -1,0 +1,128 @@
+"""Async sharded checkpointing (fault-tolerance substrate, DESIGN.md §6).
+
+Layout (one directory per step, atomic rename commit):
+
+  <dir>/step_000123.tmp/ -> <dir>/step_000123/
+      meta.json                      step, tree structure, shapes/dtypes
+      shard_<process>.npz            this process's param/opt leaves
+
+- Saves run on a background thread: the train loop donates nothing to the
+  checkpoint path; arrays are device_get'd (host transfer overlaps the next
+  step's compute — the UM DtoH analogue) and written asynchronously.
+- Restore reshards to the current mesh (elastic restarts: a checkpoint
+  written on N hosts restores onto M — leaves are stored whole per leaf
+  here since CPU dry-runs are single-process; the multi-host layout keeps
+  the per-process shard file structure).
+- keep_last bounds disk usage; a failed/partial save never becomes visible
+  (tmp dir until rename).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | pathlib.Path, *, keep_last: int = 3,
+                 process_index: int | None = None):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.process = (jax.process_index() if process_index is None
+                        else process_index)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        """Snapshot now (device_get on the caller thread — cheap, async
+        dispatch), write in the background."""
+        self.wait()
+        host_leaves = [np.asarray(jax.device_get(x)) for x in jax.tree.leaves(tree)]
+        treedef = jax.tree.structure(tree)
+
+        def _write():
+            try:
+                tmp = self.dir / f"step_{step:08d}.tmp"
+                final = self.dir / f"step_{step:08d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                np.savez(tmp / f"shard_{self.process}.npz",
+                         **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
+                (tmp / "meta.json").write_text(json.dumps({
+                    "step": step,
+                    "num_leaves": len(host_leaves),
+                    "treedef": str(treedef),
+                    "time": time.time(),
+                }))
+                if final.exists():
+                    shutil.rmtree(final)
+                tmp.rename(final)         # atomic commit
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore ---------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = []
+        for p in self.dir.iterdir():
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m and (p / "meta.json").exists():
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Load leaves and (optionally) device_put with the given shardings
+        (elastic re-mesh: the same checkpoint restores onto any mesh)."""
+        path = self.dir / f"step_{step:08d}"
+        data = np.load(path / f"shard_{self.process}.npz")
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+        treedef = jax.tree.structure(target_tree)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings
+            )
+        return tree
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target_tree, shardings)
+
+    # -- gc -----------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for p in self.dir.iterdir()
+            if (m := re.fullmatch(r"step_(\d+)", p.name))
+        )
+        for s in steps[: max(0, len(steps) - self.keep_last)]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

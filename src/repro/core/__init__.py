@@ -1,0 +1,49 @@
+"""core — the paper's contribution as a composable module.
+
+- advise:     the three CUDA UM advises as tensor-role policies
+- placement:  MemorySpace -> XLA sharding memory kinds (capability-probed)
+- residency:  ahead-of-time oversubscription planning (paper §II-D)
+- prefetch:   bulk async host->HBM transfer (paper §II-C)
+- streaming:  layer-weight streaming + offloaded remat
+- simulator:  page-granular discrete-event UM model (paper §II, faithful)
+"""
+from repro.core.advise import (
+    Accessor,
+    Advise,
+    AdviseDirective,
+    AdvisePolicy,
+    MemorySpace,
+    paper_default_policy,
+    set_accessed_by,
+    set_preferred_location,
+    set_read_mostly,
+)
+from repro.core.placement import Placement, backend_supports_memory_kinds
+from repro.core.prefetch import PrefetchIterator, prefetch_to_device
+from repro.core.residency import (
+    HBM_PER_DEVICE_BYTES,
+    MemoryBudget,
+    ResidencyPlan,
+    ResidencyPlanner,
+    plan_cell,
+)
+from repro.core.simulator import (
+    GB,
+    KB,
+    MB,
+    OversubscriptionError,
+    Region,
+    SimPlatform,
+    SimReport,
+    UMSimulator,
+)
+
+__all__ = [
+    "Accessor", "Advise", "AdviseDirective", "AdvisePolicy", "MemorySpace",
+    "paper_default_policy", "set_accessed_by", "set_preferred_location",
+    "set_read_mostly", "Placement", "backend_supports_memory_kinds",
+    "PrefetchIterator", "prefetch_to_device", "HBM_PER_DEVICE_BYTES",
+    "MemoryBudget", "ResidencyPlan", "ResidencyPlanner", "plan_cell",
+    "GB", "KB", "MB", "OversubscriptionError", "Region", "SimPlatform",
+    "SimReport", "UMSimulator",
+]

@@ -1,0 +1,89 @@
+"""Placement: turn MemorySpace decisions into XLA shardings.
+
+On TPU, host offload is expressed through sharding memory kinds
+(``NamedSharding(..., memory_kind="pinned_host")``) plus ``jax.device_put``
+transfers inside jit.  XLA:CPU (this container) exposes the memory kinds on
+shardings but cannot lower the resulting ``annotate_device_placement`` custom
+call, so we probe the backend once and degrade to device placement while
+keeping the *plan* intact — the ResidencyPlanner's analytic accounting then
+carries the host/device split (see DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.advise import MemorySpace
+
+
+@functools.lru_cache(maxsize=None)
+def backend_supports_memory_kinds(platform: str | None = None) -> bool:
+    """True if the backend can *compile* host-placement annotations."""
+    platform = platform or jax.default_backend()
+    if platform in ("tpu", "gpu"):
+        return True
+    # XLA:CPU: memory kinds exist on shardings, but annotate_device_placement
+    # has no registered implementation -> compile would fail.  Probe cheaply.
+    try:
+        dev = jax.local_devices()[0]
+        s_host = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+        s_dev = jax.sharding.SingleDeviceSharding(dev, memory_kind="device")
+
+        def f(x):
+            return jax.device_put(x, s_dev) * 2.0
+
+        jax.jit(f, in_shardings=(s_host,), out_shardings=s_dev).lower(
+            jax.ShapeDtypeStruct((8,), jax.numpy.float32)
+        ).compile()
+        return True
+    except Exception:  # noqa: BLE001 - any lowering failure means "no"
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A sharding plus the memory space it should live in."""
+
+    spec: P
+    space: MemorySpace = MemorySpace.DEVICE
+
+    def sharding(self, mesh: jax.sharding.Mesh, *, force_device: bool | None = None) -> NamedSharding:
+        """Materialize as a NamedSharding.  ``force_device`` overrides the
+        capability probe (used by the dry-run to record intent separately
+        from what the CPU backend can compile)."""
+        use_kind = self.space.xla_memory_kind
+        if force_device is None:
+            force_device = not backend_supports_memory_kinds()
+        if force_device:
+            use_kind = MemorySpace.DEVICE.xla_memory_kind
+        return NamedSharding(mesh, self.spec, memory_kind=use_kind)
+
+
+def host(spec: P = P()) -> Placement:
+    return Placement(spec, MemorySpace.HOST)
+
+
+def device(spec: P = P()) -> Placement:
+    return Placement(spec, MemorySpace.DEVICE)
+
+
+def to_device_space(x, mesh: jax.sharding.Mesh, spec: P):
+    """Inside-jit transfer host->device (the UM 'migration'); a no-op copy on
+    backends without memory-kind support."""
+    if backend_supports_memory_kinds():
+        return jax.device_put(
+            x, NamedSharding(mesh, spec, memory_kind=MemorySpace.DEVICE.xla_memory_kind)
+        )
+    return x
+
+
+def to_host_space(x, mesh: jax.sharding.Mesh, spec: P):
+    """Inside-jit transfer device->host (offload / eviction)."""
+    if backend_supports_memory_kinds():
+        return jax.device_put(
+            x, NamedSharding(mesh, spec, memory_kind=MemorySpace.HOST.xla_memory_kind)
+        )
+    return x

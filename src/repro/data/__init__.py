@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, prefetched, synthetic_batches
+
+__all__ = ["DataConfig", "prefetched", "synthetic_batches"]

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot-spots the paper's apps stress.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; compiled path on TPU.
+"""
+from repro.kernels.black_scholes.ops import black_scholes
+from repro.kernels.fdtd3d.ops import fdtd3d_run, fdtd3d_step
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.streamed_matmul.ops import matmul
+
+__all__ = [
+    "black_scholes",
+    "fdtd3d_run",
+    "fdtd3d_step",
+    "flash_attention",
+    "paged_attention",
+    "matmul",
+]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for Black-Scholes option pricing (paper app BS)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ncdf(x):
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def black_scholes_ref(s, x, t, r: float, v: float):
+    """s: spot, x: strike, t: expiry (same shape). Returns (call, put)."""
+    sf, xf, tf = (a.astype(jnp.float32) for a in (s, x, t))
+    sqrt_t = jnp.sqrt(tf)
+    d1 = (jnp.log(sf / xf) + (r + 0.5 * v * v) * tf) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    disc = jnp.exp(-r * tf)
+    call = sf * ncdf(d1) - xf * disc * ncdf(d2)
+    put = xf * disc * ncdf(-d2) - sf * ncdf(-d1)
+    return call.astype(s.dtype), put.astype(s.dtype)

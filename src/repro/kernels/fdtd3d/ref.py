@@ -1,0 +1,27 @@
+"""Oracle for the 8th-order 3-D finite-difference stencil (paper app FDTD3d).
+
+Operates on a pre-padded array (edge padding of RADIUS on every face);
+output is the interior.  out[z,y,x] = c0*in + sum_r c_r * (6 neighbours at
+distance r along each axis) — the CUDA FDTD3d sample's stencil.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RADIUS = 4
+
+
+def fdtd3d_ref(padded, coeffs):
+    """padded: (Z+2R, Y+2R, X+2R); coeffs: (RADIUS+1,). Returns (Z,Y,X)."""
+    R = RADIUS
+    Z, Y, X = (s - 2 * R for s in padded.shape)
+    c = coeffs.astype(jnp.float32)
+    p = padded.astype(jnp.float32)
+    out = c[0] * p[R:R + Z, R:R + Y, R:R + X]
+    for r in range(1, R + 1):
+        out = out + c[r] * (
+            p[R - r:R - r + Z, R:R + Y, R:R + X] + p[R + r:R + r + Z, R:R + Y, R:R + X]
+            + p[R:R + Z, R - r:R - r + Y, R:R + X] + p[R:R + Z, R + r:R + r + Y, R:R + X]
+            + p[R:R + Z, R:R + Y, R - r:R - r + X] + p[R:R + Z, R:R + Y, R + r:R + r + X]
+        )
+    return out.astype(padded.dtype)

@@ -1,0 +1,10 @@
+"""Oracle: GQA attention with causal / sliding-window masks (pure jnp)."""
+from __future__ import annotations
+
+from repro.models.attention import attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,Sq,Hq,Dh); k/v: (B,Skv,Hkv,Dh) -> (B,Sq,Hq,Dh)."""
+    return attention(q, k, v, causal=causal, window=window,
+                     q_offset=k.shape[1] - q.shape[1])

@@ -1,0 +1,25 @@
+"""Oracle for paged decode attention: gather pages, run dense softmax."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    combine_decode_partials,
+    decode_attention_partial,
+)
+
+
+def paged_attention_ref(q, kv_pool_k, kv_pool_v, block_table, seq_lens):
+    """q: (B,Hq,Dh); pools: (npages, psz, Hkv, Dh);
+    block_table: (B, pages_per_seq) int32; seq_lens: (B,) int32."""
+    b, hq, dh = q.shape
+    psz = kv_pool_k.shape[1]
+    pages = block_table.shape[1]
+    k = kv_pool_k[block_table]            # (B, pages, psz, Hkv, Dh)
+    v = kv_pool_v[block_table]
+    k = k.reshape(b, pages * psz, *k.shape[3:])
+    v = v.reshape(b, pages * psz, *v.shape[3:])
+    pos = jnp.arange(pages * psz)[None, :]
+    valid = pos < seq_lens[:, None]
+    num, den, m = decode_attention_partial(q, k, v, valid)
+    return combine_decode_partials(num, den, m, None).astype(q.dtype)

@@ -1,0 +1,7 @@
+"""Oracle for the streamed matmul (paper app cuBLAS GEMM)."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)

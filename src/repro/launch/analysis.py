@@ -1,0 +1,196 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (per chip, per step), hardware constants from the brief (TPU v5e):
+
+  compute    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective = collective_bytes / (chips x 50 GB/s/link ICI)
+
+``cost_analysis()`` counts a while (scan) body once, so dry-run cells carry
+two *cost probes* — the same step compiled with L=1 and L=2 layers, scans
+unrolled — and the per-layer delta extrapolates to the full depth
+(exact for per-layer-identical stacks; DESIGN.md §7.3).
+
+collective_bytes is parsed from the post-SPMD HLO text: the printed shapes
+are per-device (local) shapes, so per-chip link-byte estimates are
+  all-gather: out_bytes | all-reduce: 2 x out_bytes | reduce-scatter:
+  out_bytes x n_shards | all-to-all / collective-permute: out_bytes
+(ring-algorithm approximations, (n-1)/n -> 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- hardware constants (from the brief) -----------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    out_bytes: dict[str, int]
+
+    @property
+    def link_bytes(self) -> float:
+        """Per-chip link-byte estimate (ring approximations)."""
+        b = self.out_bytes
+        return (
+            b.get("all-gather", 0)
+            + 2 * b.get("all-reduce", 0)
+            + b.get("reduce-scatter", 0)
+            + b.get("all-to-all", 0)
+            + b.get("collective-permute", 0)
+        )
+
+    def as_dict(self) -> dict:
+        return {"counts": dict(self.counts), "out_bytes": dict(self.out_bytes),
+                "link_bytes": self.link_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    out_bytes: dict[str, int] = {}
+    seen_done: set[str] = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        # async pairs: count -start, skip -done (same bytes)
+        window = hlo_text[m.start():m.start() + 160]
+        if f"{op}-done(" in window:
+            continue
+        counts[op] = counts.get(op, 0) + 1
+        out_bytes[op] = out_bytes.get(op, 0) + _shape_bytes(shape_str)
+    return CollectiveStats(counts, out_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float     # probe-extrapolated, per chip
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_total: float      # 6ND (dense) / 6·N_active·D (MoE) per step
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step estimate: max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — catches remat/dispatch waste."""
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        t = self.step_time_s
+        return self.model_flops_total / (self.chips * PEAK_FLOPS * t) if t else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "step_time_s": self.step_time_s,
+            "model_flops_total": self.model_flops_total,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_at_roofline": self.mfu,
+        }
+
+
+def model_flops(arch, shape) -> float:
+    """MODEL_FLOPS per step: 6·N·D for training (N = active params),
+    2·N·D for inference (forward only)."""
+    m = arch.model
+    n = m.active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    # decode: one token per sequence + attention over the KV cache
+    flops = 2.0 * n * shape.global_batch
+    if m.num_heads:
+        eff = shape.seq_len if m.sliding_window is None else min(
+            shape.seq_len, m.sliding_window)
+        flops += (4.0 * m.num_heads * m.head_dim * eff
+                  * m.num_layers * shape.global_batch)
+    return flops
+
+
+def extrapolate(stat1: float, stat2: float, num_layers: int) -> float:
+    """L=1/L=2 probe -> full depth (per-layer-identical stacks)."""
+    per_layer = stat2 - stat1
+    base = stat1 - per_layer
+    return base + num_layers * per_layer
+
+
+def wkv_correction_flops(arch, shape) -> float:
+    """The RWKV6 WKV recurrence runs as a time scan (counted once by the
+    probes' cost analysis) — add its FLOPs analytically:
+    ~6·H·N² per token per layer forward, x3 for fwd+bwd in training."""
+    m = arch.model
+    if m.family != "ssm":
+        return 0.0
+    n = m.ssm_state or 64
+    h = m.d_model // n
+    per_token_layer = 6.0 * h * n * n
+    mult = 3.0 if shape.kind == "train" else 1.0
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    return per_token_layer * tokens * m.num_layers * mult

@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (must precede all other imports — jax locks device count on first init)
+"""§Perf hillclimb runner: measure one (arch x shape) cell under variant
+settings (sharding mode, microbatches, remat, MoE group size) and log the
+hypothesis->change->before/after record to artifacts/perf/.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch qwen2-72b \
+      --shape train_4k --tag fsdp --sharding-mode fsdp --microbatches 1
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config, get_shape
+from repro.configs.base import MeshConfig
+from repro.core.residency import plan_cell
+from repro.launch import analysis
+from repro.launch.dryrun import _mem_dict, _probe_stats, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import set_sharding_mode
+
+OUT = pathlib.Path("artifacts/perf")
+
+
+def measure(arch_name: str, shape_name: str, *, tag: str = "baseline",
+            sharding_mode: str = "2d", microbatches: int | None = None,
+            remat: str | None = None, moe_group: int | None = None,
+            probes: bool = True) -> dict:
+    arch = get_config(arch_name)
+    shape = get_shape(shape_name)
+    tr = arch.train
+    if microbatches is not None:
+        tr = dataclasses.replace(tr, microbatches=microbatches)
+    if remat is not None:
+        tr = dataclasses.replace(tr, remat=remat)
+    arch = dataclasses.replace(arch, train=tr)
+    if moe_group is not None:
+        import repro.models.moe as moe_mod
+        moe_mod.MOE_GROUP_SIZE = moe_group
+
+    mesh_cfg = MeshConfig(False)
+    plan = plan_cell(arch, shape, mesh_cfg)
+    if remat is not None:
+        plan.remat = remat
+    mesh = make_production_mesh()
+    set_sharding_mode(sharding_mode)
+    try:
+        t0 = time.time()
+        lowered, compiled = lower_cell(arch, shape, mesh, plan)
+        compile_s = time.time() - t0
+        rec = {
+            "arch": arch_name, "shape": shape_name, "tag": tag,
+            "sharding_mode": sharding_mode,
+            "microbatches": arch.train.microbatches,
+            "remat": plan.remat, "moe_group": moe_group,
+            "compile_s": round(compile_s, 1),
+            "memory_analysis": _mem_dict(compiled.memory_analysis()),
+        }
+        if probes:
+            p1 = _probe_stats(arch, shape, mesh, plan, 1)
+            p2 = _probe_stats(arch, shape, mesh, plan, 2)
+            L = arch.model.num_layers
+            roof = analysis.Roofline(
+                arch=arch_name, shape=shape_name, mesh="16x16", chips=256,
+                hlo_flops_per_chip=analysis.extrapolate(p1["flops"], p2["flops"], L)
+                + analysis.wkv_correction_flops(arch, shape) / 256,
+                hlo_bytes_per_chip=analysis.extrapolate(p1["bytes"], p2["bytes"], L),
+                collective_bytes_per_chip=max(
+                    analysis.extrapolate(p1["collective_bytes"],
+                                         p2["collective_bytes"], L), 0.0),
+                model_flops_total=analysis.model_flops(arch, shape),
+            )
+            rec["roofline"] = roof.as_dict()
+    finally:
+        set_sharding_mode("2d")
+        if moe_group is not None:
+            import repro.models.moe as moe_mod
+            moe_mod.MOE_GROUP_SIZE = 512
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{arch_name}_{shape_name}_{tag}.json").write_text(
+        json.dumps(rec, indent=1))
+    ro = rec.get("roofline", {})
+    mem = rec["memory_analysis"]
+    print(f"[{tag}] {arch_name}/{shape_name} mode={sharding_mode} "
+          f"micro={rec['microbatches']} "
+          f"perdev={mem.get('peak_extra_gb', 0) + mem.get('argument_gb', 0):.2f}GB "
+          f"compute={ro.get('compute_s', 0):.2f}s mem={ro.get('memory_s', 0):.2f}s "
+          f"coll={ro.get('collective_s', 0):.2f}s bound={ro.get('bound')} "
+          f"mfu={ro.get('mfu_at_roofline', 0):.4f}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--sharding-mode", default="2d", choices=("2d", "fsdp", "zero1"))
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--remat", choices=("none", "full", "offload", "dots"))
+    ap.add_argument("--moe-group", type=int)
+    args = ap.parse_args()
+    measure(args.arch, args.shape, tag=args.tag,
+            sharding_mode=args.sharding_mode, microbatches=args.microbatches,
+            remat=args.remat, moe_group=args.moe_group)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.models.transformer import (
+    abstract_params,
+    decode_step,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "abstract_params",
+    "decode_step",
+    "init_caches",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

@@ -1,0 +1,31 @@
+"""Dense FFN variants: SwiGLU / GeGLU (3 matrices), GELU / squared-ReLU (2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS
+
+
+def init_mlp(key, d: int, f: int, activation: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": jax.random.normal(k1, (d, f), dtype) * std_in,
+            "w_up": jax.random.normal(k2, (d, f), dtype) * std_in,
+            "w_down": jax.random.normal(k3, (f, d), dtype) * std_out,
+        }
+    return {
+        "w_up": jax.random.normal(k1, (d, f), dtype) * std_in,
+        "w_down": jax.random.normal(k2, (f, d), dtype) * std_out,
+    }
+
+
+def mlp(params, x, activation: str):
+    if activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = ACTIVATIONS[activation](x @ params["w_up"])
+    return h @ params["w_down"]

@@ -1,0 +1,149 @@
+"""Selective SSM (Mamba S6) — the SSM half of Hymba's parallel heads
+(arXiv:2411.13676 uses Mamba heads with state dim 16 alongside attention).
+
+  dt_t = softplus(x_t W_dt + b)                 (d_inner,)
+  B_t, C_t = x_t W_B, x_t W_C                   (N,)
+  h_t = exp(dt_t A) * h_{t-1} + (dt_t B_t) x_t  (d_inner, N), A = -exp(A_log)
+  y_t = h_t . C_t + D * x_t
+
+Training/prefill uses jax.lax.associative_scan (parallel prefix over time);
+decode is the single-step recurrence with carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import BATCH, UNC, shard_hint
+
+CONV_K = 4
+SSM_CHUNK = 256  # sequential chunks; assoc-scan runs intra-chunk only
+
+
+def init_ssm(key, d_model: int, d_inner: int, n_state: int, dtype):
+    ks = jax.random.split(key, 6)
+    std = d_model ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2 * d_inner), dtype) * std,
+        "conv_w": jax.random.normal(ks[1], (CONV_K, d_inner), dtype) * 0.2,
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_dt": jax.random.normal(ks[2], (d_inner, d_inner), dtype) * (d_inner ** -0.5) * 0.1,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_inner,), 0.01, jnp.float32))),
+        "w_B": jax.random.normal(ks[3], (d_inner, n_state), dtype) * (d_inner ** -0.5),
+        "w_C": jax.random.normal(ks[4], (d_inner, n_state), dtype) * (d_inner ** -0.5),
+        "A_log": jnp.log(jnp.arange(1, n_state + 1, dtype=jnp.float32))[None, :]
+        * jnp.ones((d_inner, 1), jnp.float32),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (d_inner, d_model), dtype) * (d_inner ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d, k=CONV_K. x: (B,S,dI); state: (B,K-1,dI)."""
+    k = w.shape[0]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype) if state is None else state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    return out, new_state
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def ssm_scan(params, x_conv, chunk: int = SSM_CHUNK):
+    """x_conv: (B,S,dI) post-conv/silu.
+
+    Chunked selective scan: a sequential lax.scan over SSM_CHUNK-token
+    chunks (carry = state) with the parallel associative scan *inside* each
+    chunk, checkpointed — the full-sequence associative scan would save
+    log2(S) levels of (B,S,dI,N) fp32 residuals for the backward pass
+    (~10 GB/device for hymba train_4k).
+    """
+    p = params
+    B, S, dI = x_conv.shape
+    xf = x_conv.astype(jnp.float32)
+    dt = jax.nn.softplus(xf @ p["w_dt"].astype(jnp.float32) + p["dt_bias"])   # (B,S,dI)
+    Bmat = xf @ p["w_B"].astype(jnp.float32)                                   # (B,S,N)
+    Cmat = xf @ p["w_C"].astype(jnp.float32)                                   # (B,S,N)
+    A = -jnp.exp(p["A_log"])                                                   # (dI,N)
+    N = A.shape[1]
+
+    def chunk_fn(h0, args):
+        dt_c, x_c, B_c, C_c = args          # (B,c,dI), (B,c,dI), (B,c,N) x2
+        decay = jnp.exp(dt_c[..., None] * A[None, None])
+        drive = (dt_c * x_c)[..., None] * B_c[:, :, None, :]
+        a_cum, h = jax.lax.associative_scan(_combine, (decay, drive), axis=1)
+        h = h + a_cum * h0[:, None]          # fold in the carried state
+        y = jnp.einsum("bsdn,bsn->bsd", h, C_c) + p["D"] * x_c
+        return h[:, -1], y
+
+    if S % chunk == 0 and S > chunk:
+        nc = S // chunk
+        xs = tuple(
+            t.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+            for t in (dt, xf, Bmat, Cmat)
+        )
+        h0 = jnp.zeros((B, dI, N), jnp.float32)
+        h_last, ys = jax.lax.scan(jax.checkpoint(chunk_fn), h0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, dI)
+    else:
+        h_last, y = chunk_fn(jnp.zeros((B, dI, N), jnp.float32),
+                             (dt, xf, Bmat, Cmat))
+    return y.astype(x_conv.dtype), h_last
+
+
+def ssm_step(params, x_t, ssm_state):
+    """Single decode step. x_t: (B,dI) post-conv/silu; state (B,dI,N) fp32."""
+    p = params
+    xf = x_t.astype(jnp.float32)
+    dt = jax.nn.softplus(xf @ p["w_dt"].astype(jnp.float32) + p["dt_bias"])
+    Bv = xf @ p["w_B"].astype(jnp.float32)
+    Cv = xf @ p["w_C"].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[..., None] * A[None])
+    h = decay * ssm_state + (dt * xf)[..., None] * Bv[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cv) + p["D"] * xf
+    return y.astype(x_t.dtype), h
+
+
+def mamba(params, x, state=None):
+    """Full Mamba head path. x: (B,S,d_model) or (B,1,d_model) decoding.
+
+    state: None (train/prefill from scratch) or (conv_state, ssm_state).
+    Returns (y (B,S,d_model), new_state).
+    """
+    p = params
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # channel-TP for the recurrence: scanning a sequence-sharded axis would
+    # generate halo collectives at every associative-scan level; d_inner
+    # shards cleanly (1600/16) and the reshard in/out is one small all-to-all
+    if x.shape[1] > 1:
+        xin = shard_hint(xin, P(BATCH, None, "model"))
+        z = shard_hint(z, P(BATCH, None, "model"))
+    conv_state = ssm_state = None
+    if state is not None:
+        conv_state, ssm_state = state
+    if x.shape[1] == 1 and ssm_state is not None:
+        xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+        xc = jax.nn.silu(xc)
+        y, ssm_state = ssm_step(p, xc[:, 0], ssm_state)
+        y = y[:, None]
+    else:
+        xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+        xc = jax.nn.silu(xc)
+        y, ssm_state = ssm_scan(p, xc)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (conv_state, ssm_state)
+
+
+def init_mamba_state(batch: int, d_inner: int, n_state: int, dtype):
+    return (
+        jnp.zeros((batch, CONV_K - 1, d_inner), dtype),
+        jnp.zeros((batch, d_inner, n_state), jnp.float32),
+    )

@@ -1,0 +1,13 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init_state,
+)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "apply_updates", "clip_by_global_norm", "global_norm",
+    "init_state", "warmup_cosine",
+]

@@ -1,0 +1,174 @@
+"""AdamW with fp32 master weights, optional int8-quantized moments, and
+optional host-offloaded state (the UM PREFERRED_LOCATION(HOST) +
+ACCESSED_BY(DEVICE) pattern — ZeRO-Offload on TPU).
+
+State layout (pytree mirroring params):
+  master: fp32 copy of params (dtype of params if master_dtype matches)
+  m, v:   fp32 moments, or int8 + per-tensor fp32 absmax scales when
+          int8_moments (the planner's shrink-before-move escalation)
+  step:   scalar int32
+
+The update is functional and donation-friendly; when the ResidencyPlan puts
+opt state on the host, launch/step.py fetches it (streaming.fetch_params)
+at the point of use and offloads the updated state — XLA overlaps both
+copies with the backward pass (bulk async prefetch, paper §II-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    int8_moments: bool = False
+    master_dtype: str = "float32"
+
+
+def _q(x, per_leading: bool = False):
+    """int8 absmax quantization: (q, scale). ``per_leading`` keeps one scale
+    per leading (layer) slice — used by the blocked stacked-leaf update."""
+    if per_leading:
+        axes = tuple(range(1, x.ndim))
+        scale = jnp.maximum(jnp.max(jnp.abs(x), axis=axes), 1e-12) / 127.0
+        sb = scale.reshape(scale.shape + (1,) * (x.ndim - 1))
+        return jnp.round(x / sb).astype(jnp.int8), scale.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    return jnp.round(x / scale).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dq(q, scale):
+    if getattr(scale, "ndim", 0):
+        scale = scale.reshape(scale.shape + (1,) * (q.ndim - scale.ndim))
+    return q.astype(jnp.float32) * scale
+
+
+def _chunk_leading(p) -> bool:
+    """Big stacked-layer leaves get lax.map'd updates + per-layer scales."""
+    return (p.ndim >= 3 and p.shape[0] >= CHUNKED_UPDATE_MIN_LAYERS
+            and p.size // p.shape[0] >= 1 << 20)
+
+
+def init_state(params, cfg: AdamWConfig):
+    master_dt = jnp.float32 if cfg.master_dtype == "float32" else None
+
+    def per_leaf(p):
+        # every leaf must own a UNIQUE buffer: a no-op astype aliases the
+        # param, and jax deduplicates identical constants (two jnp.zeros of
+        # the same shape can share a buffer) — either breaks donation
+        # (`f(donate(a), donate(a))`)
+        def uniq(x):
+            return jnp.array(x, copy=True)
+
+        master = jnp.array(p, dtype=master_dt or p.dtype, copy=True)
+        if cfg.int8_moments:
+            scale_shape = (p.shape[0],) if _chunk_leading(p) else ()
+            return {
+                "master": master,
+                "m": uniq(jnp.zeros(p.shape, jnp.int8)),
+                "m_scale": uniq(jnp.zeros(scale_shape, jnp.float32)),
+                "v": uniq(jnp.zeros(p.shape, jnp.int8)),
+                "v_scale": uniq(jnp.zeros(scale_shape, jnp.float32)),
+            }
+        return {"master": master, "m": uniq(jnp.zeros(p.shape, jnp.float32)),
+                "v": uniq(jnp.zeros(p.shape, jnp.float32))}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "leaves": jax.tree.map(per_leaf, params),
+    }
+
+
+# leaves with a leading stacked-layer dim larger than this are updated with
+# a lax.map over that dim: the fp32 m/v/update transients of a multi-GB
+# stacked leaf would otherwise dominate peak memory (the grok-1 MoE stacks
+# are 1.6 GB/leaf/device in fp32 — x6 live copies blew the HBM budget)
+CHUNKED_UPDATE_MIN_LAYERS = 8
+NUM_UPDATE_BLOCKS = 8
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig, lr):
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def per_leaf(p, g, s):
+        g = g.astype(jnp.float32)
+        if cfg.int8_moments:
+            # m linear int8; v stored as sqrt(v) int8 (range compression —
+            # linear int8 on v collapses small second moments to zero and
+            # destroys convergence; cf. Dettmers 8-bit Adam's nonlinear maps)
+            m = _dq(s["m"], s["m_scale"])
+            v = jnp.square(_dq(s["v"], s["v_scale"]))
+        else:
+            m, v = s["m"], s["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        master = s["master"].astype(jnp.float32)
+        update = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * update
+        new_s = {"master": master.astype(s["master"].dtype)}
+        if cfg.int8_moments:
+            per_l = getattr(s.get("m_scale"), "ndim", 0) == 1
+            new_s["m"], new_s["m_scale"] = _q(m, per_leading=per_l)
+            new_s["v"], new_s["v_scale"] = _q(jnp.sqrt(v), per_leading=per_l)
+        else:
+            new_s["m"], new_s["v"] = m, v
+        return master.astype(p.dtype), new_s
+
+    def maybe_chunked(p, g, s):
+        if _chunk_leading(p):
+            # blocked in-place update: process the stacked-layer leaf in
+            # NUM_UPDATE_BLOCKS slices written back with .at[].set — with
+            # donation this stays in the original buffers.  (A lax.map here
+            # double-buffers: while-loop ys cannot alias xs, which costs a
+            # full fp32 master + moments copy per MoE stack.)
+            L = p.shape[0]
+            nb = NUM_UPDATE_BLOCKS
+            while L % nb:
+                nb -= 1
+            bs = L // nb
+            new_p = p
+            new_s = dict(s)
+            for b in range(nb):
+                sl = slice(b * bs, (b + 1) * bs)
+                pi = jax.lax.slice_in_dim(p, b * bs, (b + 1) * bs, axis=0)
+                gi = jax.lax.slice_in_dim(g, b * bs, (b + 1) * bs, axis=0)
+                si = {k: jax.lax.slice_in_dim(v, b * bs, (b + 1) * bs, axis=0)
+                      for k, v in s.items()}
+                up, us = per_leaf(pi, gi, si)
+                new_p = jax.lax.dynamic_update_slice_in_dim(new_p, up, b * bs, 0)
+                new_s = {k: jax.lax.dynamic_update_slice_in_dim(
+                    new_s[k], us[k].astype(new_s[k].dtype), b * bs, 0)
+                    for k in new_s}
+            return new_p, new_s
+        return per_leaf(p, g, s)
+
+    flat = jax.tree.map(maybe_chunked, params, grads, state["leaves"],
+                        is_leaf=lambda x: isinstance(x, dict) and "master" in x)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_leaves = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "leaves": new_leaves}
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm

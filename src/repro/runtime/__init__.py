@@ -1,0 +1,21 @@
+from repro.runtime.compression import (
+    compress_with_feedback,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+    tree_compressed_psum,
+)
+from repro.runtime.elastic import ElasticDecision, plan_elastic_mesh
+from repro.runtime.fault_tolerance import (
+    InjectedFault,
+    RunReport,
+    StragglerAlert,
+    TrainRunner,
+)
+
+__all__ = [
+    "compress_with_feedback", "dequantize_int8", "init_error_feedback",
+    "quantize_int8", "tree_compressed_psum", "ElasticDecision",
+    "plan_elastic_mesh", "InjectedFault", "RunReport", "StragglerAlert",
+    "TrainRunner",
+]

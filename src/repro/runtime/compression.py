@@ -1,0 +1,69 @@
+"""Gradient compression for the inter-pod all-reduce (DESIGN.md §6).
+
+int8 absmax quantization with error feedback (EF-SGD style): the
+quantization residual is carried into the next step, so the compressed
+all-reduce is unbiased in the long run and converges at the uncompressed
+rate for smooth objectives.  Halves (bf16) or quarters (fp32) the bytes on
+the slow inter-pod links — the gradient all-reduce is the ONLY cross-pod
+collective in our layout, so the saving applies exactly where the
+bandwidth hierarchy is weakest.
+
+``compressed_psum`` is shard_map-ready: quantize -> integer psum -> dequant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """(values int8, scale fp32). Per-tensor absmax."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grad, error):
+    """-> (q, scale, new_error). new_error = grad+error - dequant(q)."""
+    g = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(g)
+    return q, scale, g - dequantize_int8(q, scale)
+
+
+def compressed_psum(x, axis_name: str, error):
+    """Mean-all-reduce `x` over `axis_name` in int8 with error feedback.
+
+    Use inside shard_map over the pod axis.  The integer sum is exact
+    (int8 -> int32 accumulate); the scale is shared by a pmax so every pod
+    quantizes onto the same grid and dequantizes identically.
+    """
+    g = x.astype(jnp.float32) + error
+    local_scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    scale = jax.lax.pmax(local_scale, axis_name)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_error = g - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = total.astype(jnp.float32) * scale / n
+    return mean.astype(x.dtype), new_error
+
+
+def tree_compressed_psum(grads, axis_name: str, errors):
+    """Pytree version; errors tree matches grads (fp32)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, ne = compressed_psum(g, axis_name, e)
+        out_g.append(m)
+        out_e.append(ne)
+    return jax.tree.unflatten(treedef, out_g), jax.tree.unflatten(treedef, out_e)
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,117 @@
+"""Graph500 — BFS kernel (paper Table I).
+
+Data-dependent access: each level sweeps a frontier-dependent slice of the
+edge list (modeled with the simulator's ``partial`` access + rotating
+cursor).  Advise: PREFERRED_LOCATION(DEVICE) on the adjacency (the paper
+keeps data used by the GPU close to GPU memory); READ_MOSTLY on row
+pointers.  Figure of merit: mean BFS iteration (paper §III-B).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.advise import MemorySpace
+from repro.core.simulator import UMSimulator
+
+NAME = "graph500"
+LEVELS = 8
+
+
+def simulate(sim: UMSimulator, total_bytes: float, variant: str,
+             iters: int = LEVELS) -> None:
+    col = int(total_bytes * 0.70)
+    row = int(total_bytes * 0.10)
+    state = int(total_bytes * 0.20) // 3
+    sim.alloc("col_idx", col, role="graph")
+    sim.alloc("row_ptr", row, role="graph")
+    for nm in ("frontier", "visited", "parent"):
+        sim.alloc(nm, state, role="state")
+    sim.host_write("col_idx")
+    sim.host_write("row_ptr")
+    sim.host_write("frontier", state)
+
+    if variant == "explicit":
+        for nm in ("col_idx", "row_ptr", "frontier"):
+            sim.explicit_copy_to_device(nm)
+        sim.explicit_alloc("visited")
+        sim.explicit_alloc("parent")
+    if variant in ("um_advise", "um_both"):
+        sim.advise_preferred_location("col_idx", MemorySpace.DEVICE)
+        sim.advise_read_mostly("row_ptr")
+    if variant in ("um_prefetch", "um_both"):
+        sim.prefetch("col_idx")
+        sim.prefetch("row_ptr")
+
+    edges = col / 8  # long indices (paper: long data types)
+    for _ in range(iters):
+        sim.kernel(
+            "bfs_level",
+            flops=4.0 * edges / iters,
+            reads=["col_idx", "row_ptr", "frontier", "visited"],
+            writes=["frontier", "visited", "parent"],
+            partial={"col_idx": 1.0 / iters},
+        )
+    if variant == "explicit":
+        sim.explicit_copy_to_host("parent")
+    else:
+        sim.host_read("parent")
+
+
+def bfs_levels(row_ptr, col_idx, src: int, n: int, max_deg: int):
+    """Dense frontier BFS returning per-node level (-1 unreachable).
+
+    Padded adjacency gather: row i's neighbours are col_idx[row_ptr[i]:...],
+    padded to max_deg with -1.
+    """
+    # build padded neighbour matrix once (host-side helper for tests)
+    import numpy as np
+
+    rp = np.asarray(row_ptr)
+    ci = np.asarray(col_idx)
+    pad = np.full((n, max_deg), -1, np.int32)
+    for i in range(n):
+        deg = rp[i + 1] - rp[i]
+        pad[i, :deg] = ci[rp[i]:rp[i + 1]]
+    nbr = jnp.array(pad)
+
+    level = jnp.full((n,), -1, jnp.int32)
+    level = level.at[src].set(0)
+    frontier = jnp.zeros((n,), bool).at[src].set(True)
+
+    def body(carry, d):
+        level, frontier = carry
+        # neighbours of the frontier
+        mask = frontier[:, None] & (nbr >= 0)
+        reached = jnp.zeros((n,), bool).at[jnp.where(nbr >= 0, nbr, 0).reshape(-1)].max(
+            mask.reshape(-1)
+        )
+        new = reached & (level < 0)
+        level = jnp.where(new, d + 1, level)
+        return (level, new), new.sum()
+
+    (level, _), _ = jax.lax.scan(body, (level, frontier), jnp.arange(n))
+    return level
+
+
+def numeric(key, n: int = 64, avg_deg: int = 4):
+    """Random graph; returns levels for comparison against networkx."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    edges = set()
+    for _ in range(n * avg_deg):
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    adj = [[] for _ in range(n)]
+    for u, v in edges:
+        adj[u].append(v)
+        adj[v].append(u)
+    ptr, idx = [0], []
+    for i in range(n):
+        idx += sorted(adj[i])
+        ptr.append(len(idx))
+    max_deg = max(1, max(len(a) for a in adj))
+    level = bfs_levels(jnp.array(ptr), jnp.array(idx), 0, n, max_deg)
+    return {"level": level, "edges": sorted(edges), "n": n}

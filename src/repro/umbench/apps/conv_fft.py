@@ -1,0 +1,99 @@
+"""conv0/conv1/conv2 — FFT-based image convolution (paper Table I).
+
+conv0 uses Real-to-Complex / Complex-to-Real plans (frequency buffers ~half
+the complex size); conv1/conv2 use Complex-to-Complex plans with different
+buffer splits.  Advise: PREFERRED_LOCATION(DEVICE) on the frequency
+workspaces (GPU-private), READ_MOSTLY on the kernel image.  Prefetch: the
+input image + kernel.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.advise import MemorySpace
+from repro.core.simulator import UMSimulator
+
+ITERS = 4
+
+# (img, kern_img, freq_img, freq_kern, out) fractions per variant
+SPLITS = {
+    "conv0": (0.28, 0.02, 0.22, 0.20, 0.28),   # R2C/C2R: half-size freq
+    "conv1": (0.20, 0.02, 0.29, 0.29, 0.20),   # C2C
+    "conv2": (0.22, 0.02, 0.27, 0.27, 0.22),   # C2C, second geometry
+}
+
+
+def make_simulate(kind: str):
+    fr = SPLITS[kind]
+
+    def simulate(sim: UMSimulator, total_bytes: float, variant: str,
+                 iters: int = ITERS) -> None:
+        names = ("img", "kern_img", "freq_img", "freq_kern", "out")
+        for nm, f in zip(names, fr):
+            sim.alloc(nm, int(total_bytes * f), role="conv")
+        sim.host_write("img")
+        sim.host_write("kern_img")
+
+        if variant == "explicit":
+            sim.explicit_copy_to_device("img")
+            sim.explicit_copy_to_device("kern_img")
+            for nm in ("freq_img", "freq_kern", "out"):
+                sim.explicit_alloc(nm)
+        if variant in ("um_advise", "um_both"):
+            sim.advise_preferred_location("freq_img", MemorySpace.DEVICE)
+            sim.advise_preferred_location("freq_kern", MemorySpace.DEVICE)
+            sim.advise_read_mostly("kern_img")
+        if variant in ("um_prefetch", "um_both"):
+            sim.prefetch("img")
+            sim.prefetch("kern_img")
+
+        n = int(total_bytes * fr[0]) / 8  # complex64 elements
+        fft_flops = 5.0 * n * max(1.0, math.log2(max(n, 2)))
+        sim.kernel("fft_kern", flops=fft_flops * 0.1,
+                   reads=["kern_img"], writes=["freq_kern"])
+        for _ in range(iters):
+            sim.kernel("fft_fwd", flops=fft_flops, reads=["img"], writes=["freq_img"])
+            sim.kernel("pointwise", flops=6.0 * n,
+                       reads=["freq_img", "freq_kern"], writes=["freq_img"])
+            sim.kernel("fft_inv", flops=fft_flops, reads=["freq_img"], writes=["out"])
+        if variant == "explicit":
+            sim.explicit_copy_to_host("out")
+        else:
+            sim.host_read("out")
+
+    return simulate
+
+
+def fft_convolve_2d(img, kern, *, real: bool):
+    """Circular FFT convolution (the numeric oracle path)."""
+    if real:
+        fi = jnp.fft.rfft2(img)
+        fk = jnp.fft.rfft2(kern, s=img.shape)
+        return jnp.fft.irfft2(fi * fk, s=img.shape)
+    fi = jnp.fft.fft2(img.astype(jnp.complex64))
+    fk = jnp.fft.fft2(kern.astype(jnp.complex64), s=img.shape)
+    return jnp.fft.ifft2(fi * fk).real
+
+
+def direct_convolve_2d(img, kern):
+    """O(n^2 k^2) circular convolution for small-size validation."""
+    H, W = img.shape
+    kh, kw = kern.shape
+    out = jnp.zeros_like(img)
+    for i in range(kh):
+        for j in range(kw):
+            out = out + kern[i, j] * jnp.roll(img, (i, j), axis=(0, 1))
+    return out
+
+
+def numeric(key, n: int = 32, real: bool = True):
+    k1, k2 = jax.random.split(key)
+    img = jax.random.normal(k1, (n, n), jnp.float32)
+    kern = jax.random.normal(k2, (5, 5), jnp.float32)
+    out = fft_convolve_2d(img, kern, real=real)
+    # direct circular conv: out = sum_{di,dj} k[di,dj] * roll(img, (di,dj))
+    ref = direct_convolve_2d(img, kern)
+    return {"out": out, "ref": ref}

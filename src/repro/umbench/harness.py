@@ -1,0 +1,114 @@
+"""umbench harness — the paper's experiment matrix (§III):
+
+  {explicit, um, um_advise, um_prefetch, um_both}
+× {in-memory (~80 % device mem), oversubscribed (~150 %)}
+× platforms (Intel-Pascal/Volta PCIe, P9-Volta NVLink, TPU-v5e host model)
+× six applications.
+
+Figure of merit: simulated GPU-kernel-time-plus-stalls (the paper's metric)
+with the paper's Fig. 4/7 breakdown (compute / fault stall / HtoD / DtoH).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.simulator import (
+    GB,
+    OversubscriptionError,
+    SimPlatform,
+    SimReport,
+    UMSimulator,
+)
+from repro.umbench import platforms as plat
+from repro.umbench.apps import bfs, black_scholes, cg, conv_fft, fdtd3d, matmul
+
+VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
+REGIMES = {"in_memory": 0.80, "oversubscribed": 1.50}
+
+APPS: dict[str, Callable] = {
+    "bs": black_scholes.simulate,
+    "cublas": matmul.simulate,
+    "cg": cg.simulate,
+    "graph500": bfs.simulate,
+    "conv0": conv_fft.make_simulate("conv0"),
+    "conv1": conv_fft.make_simulate("conv1"),
+    "conv2": conv_fft.make_simulate("conv2"),
+    "fdtd3d": fdtd3d.simulate,
+}
+
+DEFAULT_PLATFORMS = ("intel-pascal-pcie", "intel-volta-pcie", "p9-volta-nvlink")
+
+
+@dataclasses.dataclass
+class CellResult:
+    app: str
+    platform: str
+    variant: str
+    regime: str
+    report: SimReport | None      # None => N/A (explicit cannot oversubscribe)
+
+    @property
+    def total_s(self) -> float | None:
+        return None if self.report is None else self.report.total_s
+
+    def row(self) -> dict:
+        r = self.report
+        return {
+            "app": self.app,
+            "platform": self.platform,
+            "variant": self.variant,
+            "regime": self.regime,
+            "total_s": None if r is None else round(r.total_s, 4),
+            **({} if r is None else {
+                "compute_s": round(r.compute_s, 4),
+                "fault_stall_s": round(r.fault_stall_s, 4),
+                "htod_s": round(r.htod_s, 4),
+                "dtoh_s": round(r.dtoh_s, 4),
+                "htod_gb": round(r.htod_bytes / GB, 3),
+                "dtoh_gb": round(r.dtoh_bytes / GB, 3),
+                "faults": r.n_faults,
+                "evictions": r.n_evictions,
+            }),
+        }
+
+
+def run_cell(app: str, platform: SimPlatform, variant: str, regime: str) -> CellResult:
+    total = REGIMES[regime] * platform.device_mem_gb * GB
+    sim = UMSimulator(platform)
+    try:
+        APPS[app](sim, total, variant)
+        report = sim.finish()
+    except OversubscriptionError:
+        report = None  # the paper: 'the case does not exist with explicit'
+    return CellResult(app, platform.name, variant, regime, report)
+
+
+def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
+               regimes=("in_memory", "oversubscribed"),
+               variants=VARIANTS) -> list[CellResult]:
+    apps = apps or list(APPS)
+    out = []
+    for regime in regimes:
+        for pname in platform_names:
+            platform = plat.PLATFORMS[pname]
+            for app in apps:
+                for variant in variants:
+                    out.append(run_cell(app, platform, variant, regime))
+    return out
+
+
+def speedup_vs_um(results: list[CellResult]) -> dict[tuple, float]:
+    """(app, platform, regime, variant) -> total_time(um) / total_time(variant)."""
+    base = {
+        (r.app, r.platform, r.regime): r.total_s
+        for r in results if r.variant == "um" and r.total_s
+    }
+    out = {}
+    for r in results:
+        if r.total_s is None:
+            continue
+        key = (r.app, r.platform, r.regime)
+        if key in base:
+            out[(r.app, r.platform, r.regime, r.variant)] = base[key] / r.total_s
+    return out

@@ -1,0 +1,64 @@
+"""Platform models for the UM simulator — the paper's three test systems
+(§III-B) plus the TPU v5e host-attach point this framework targets.
+
+Calibration sources: PCIe Gen3 x16 effective ~12 GB/s; NVLink2 CPU<->GPU
+effective ~60 GB/s (paper cites Pearson et al. ICPE'19 microbenchmarks);
+fault-group handling latencies from Sakharnykh GTC'17 (tens of us per group,
+lower on P9 due to ATS).  Device numbers: GTX 1050 Ti (4 GB, 112 GB/s,
+~2.1 TFLOP/s fp32); V100 (16 GB, 900 GB/s, ~14 TFLOP/s fp32);
+TPU v5e (16 GB, 819 GB/s, 197 TFLOP/s bf16, PCIe Gen4-class host link).
+"""
+from __future__ import annotations
+
+from repro.core.simulator import SimPlatform
+
+INTEL_PASCAL = SimPlatform(
+    name="intel-pascal-pcie",
+    device_mem_gb=4.0,
+    link_bw_gbs=12.0,
+    device_bw_gbs=112.0,
+    device_flops_tps=2.1,
+    fault_latency_us=45.0,
+    host_can_access_device=False,
+    device_can_access_host=True,
+    fault_migration_efficiency=0.35,
+)
+
+INTEL_VOLTA = SimPlatform(
+    name="intel-volta-pcie",
+    device_mem_gb=16.0,
+    link_bw_gbs=12.0,
+    device_bw_gbs=900.0,
+    device_flops_tps=14.0,
+    fault_latency_us=45.0,
+    host_can_access_device=False,
+    device_can_access_host=True,
+    fault_migration_efficiency=0.30,
+)
+
+P9_VOLTA = SimPlatform(
+    name="p9-volta-nvlink",
+    device_mem_gb=16.0,
+    link_bw_gbs=60.0,
+    device_bw_gbs=900.0,
+    device_flops_tps=14.0,
+    fault_latency_us=20.0,
+    host_can_access_device=True,   # ATS: CPU can map GPU memory
+    device_can_access_host=True,
+    fault_migration_efficiency=0.85,  # coherent fabric: near-bulk fault paths
+)
+
+TPU_V5E = SimPlatform(
+    name="tpu-v5e-host",
+    device_mem_gb=16.0,
+    link_bw_gbs=32.0,
+    device_bw_gbs=819.0,
+    device_flops_tps=197.0,
+    fault_latency_us=0.0,          # no page faults: all transfers are planned
+    host_can_access_device=False,
+    device_can_access_host=True,
+)
+
+PLATFORMS = {
+    p.name: p for p in (INTEL_PASCAL, INTEL_VOLTA, P9_VOLTA, TPU_V5E)
+}

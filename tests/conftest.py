@@ -1,0 +1,10 @@
+"""Shared fixtures. IMPORTANT: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; only launch/dryrun.py (and the sharding subprocess tests)
+request 512/8 fake devices."""
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)

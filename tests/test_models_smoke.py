@@ -1,0 +1,132 @@
+"""Per-arch smoke tests (brief deliverable (f)): reduced same-family config,
+one forward/train step on CPU, output shapes + no NaNs; decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import decode_step, init_caches, init_params, loss_fn, prefill
+
+
+def _batch(cfg, key, B=2, S=32):
+    if cfg.family == "audio":
+        toks = jax.random.randint(key, (B, S, cfg.num_codebooks), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.random.normal(key, (B, S, cfg.d_model)),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        }
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_train_step(arch, key):
+    cfg = get_config(arch).model.reduce()
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+
+    def loss(p):
+        return loss_fn(p, batch, cfg, remat="full")
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(val))
+    # uniform-init loss ~ ln(vocab)
+    assert abs(float(val) - np.log(cfg.vocab_size)) < 1.0
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_decode_step(arch, key):
+    cfg = get_config(arch).model.reduce()
+    params = init_params(key, cfg)
+    B, S = 2, 16
+    caches = init_caches(cfg, B, S)
+    tok_shape = (B, cfg.num_codebooks) if cfg.family == "audio" else (B,)
+    tok = {"tokens": jnp.zeros(tok_shape, jnp.int32)}
+    logits, caches2 = jax.jit(
+        lambda p, b, c, l: decode_step(p, b, c, l, cfg)
+    )(params, tok, caches, jnp.int32(0))
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    expect = (B, cfg.num_codebooks, cfg.padded_vocab) if cfg.family == "audio" \
+        else (B, cfg.padded_vocab)
+    assert logits.shape == expect
+    # caches advanced (some leaf changed)
+    changed = any(
+        not np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(caches2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "rwkv6-3b", "hymba-1.5b"])
+def test_prefill_decode_matches_full_forward(arch, key):
+    """Teacher-forced decode after prefill reproduces the full forward's
+    next-token logits (cache correctness across all cache types).
+
+    Capacity-routed MoE archs are excluded: token dropping under the train
+    capacity factor (1.25, GShard) is group-composition-dependent, so decode
+    (per-step groups, drop-free capacity 2.0) is *batch-variant* relative to
+    the full forward — an inherent property of capacity routing, not a cache
+    bug (decode cache correctness for MoE is covered by test_reduced_decode
+    and the serve integration test)."""
+    cfg = get_config(arch).model.reduce()
+    params = init_params(key, cfg)
+    B, S, extra = 1, 16, 4
+    toks = jax.random.randint(key, (B, S + extra), 0, cfg.vocab_size)
+
+    # full forward logits at position S+extra-1
+    from repro.models.transformer import embed_inputs, backbone, logits_fn
+    x, pos = embed_inputs(params, {"tokens": toks}, cfg)
+    h, _ = backbone(params, x, cfg, pos)
+    full_logits = logits_fn(params, h, cfg)[:, -1]
+
+    # prefill on the first S, then decode the next `extra` teacher-forced
+    logits, caches = prefill(params, {"tokens": toks[:, :S]}, cfg)
+    # re-home prompt caches into full-size buffers
+    caches_full = init_caches(cfg, B, S + extra)
+    if cfg.family == "ssm":
+        caches_full = caches
+    else:
+        sc = min(caches_full["k"].shape[2], caches["k"].shape[2])
+        for nm in ("k", "v"):
+            caches_full[nm] = jax.lax.dynamic_update_slice_in_dim(
+                caches_full[nm], caches[nm][:, :, -sc:], 0, axis=2)
+        for nm in ("conv", "ssm"):
+            if nm in caches_full:
+                caches_full[nm] = caches[nm]
+    out = logits
+    for i in range(extra):
+        out, caches_full = decode_step(
+            params, {"tokens": toks[:, S + i]}, caches_full,
+            jnp.int32(S + i), cfg)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(full_logits, np.float32),
+        atol=2e-2, rtol=2e-2)
+
+
+def test_sliding_window_cache_is_ring_buffer(key):
+    """SWA archs allocate window-sized caches (sub-quadratic long_500k)."""
+    cfg = get_config("mixtral-8x22b").model.reduce()
+    assert cfg.sliding_window is not None
+    caches = init_caches(cfg, 2, 10 * cfg.sliding_window)
+    assert caches["k"].shape[2] == cfg.sliding_window
+
+
+def test_vocab_padding_masked(key):
+    """hymba's 32001 vocab pads to 32256 — padded logits never win argmax."""
+    cfg = dataclasses.replace(get_config("hymba-1.5b").model.reduce(),
+                              vocab_size=31)
+    assert cfg.padded_vocab == 256
+    params = init_params(key, cfg)
+    from repro.models.transformer import embed_inputs, backbone, logits_fn
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    x, pos = embed_inputs(params, {"tokens": toks}, cfg)
+    h, _ = backbone(params, x, cfg, pos)
+    logits = logits_fn(params, h, cfg)
+    assert int(jnp.max(jnp.argmax(logits, -1))) < cfg.vocab_size

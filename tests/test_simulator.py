@@ -1,0 +1,191 @@
+"""UM simulator unit + property tests: advise semantics (paper §II) and
+conservation/capacity invariants (hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.advise import Accessor, MemorySpace
+from repro.core.simulator import (
+    GB,
+    MB,
+    OversubscriptionError,
+    SimPlatform,
+    UMSimulator,
+)
+
+PCIE = SimPlatform("pcie", 1.0, 12.0, 500.0, 10.0, 45.0, False, True,
+                   fault_migration_efficiency=0.35)
+NVLINK = SimPlatform("nvlink", 1.0, 60.0, 500.0, 10.0, 20.0, True, True,
+                     fault_migration_efficiency=0.85)
+
+
+def test_fault_migration_counts():
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", 64 * MB)
+    sim.host_write("a")
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])
+    r = sim.finish()
+    assert r.n_faults == 32                # 64MB / 2MB fault groups
+    assert r.htod_bytes == 64 * MB
+    assert r.fault_stall_s > 0
+
+
+def test_resident_data_no_refault():
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", 64 * MB)
+    sim.host_write("a")
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])
+    f1 = sim.report.n_faults
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])
+    assert sim.report.n_faults == f1       # second pass: all local
+
+
+def test_explicit_cannot_oversubscribe():
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", int(1.5 * GB))
+    sim.host_write("a")
+    with pytest.raises(OversubscriptionError):
+        sim.explicit_copy_to_device("a")
+
+
+def test_um_oversubscription_evicts_and_completes():
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", int(0.8 * GB))
+    sim.alloc("b", int(0.8 * GB))
+    sim.host_write("a")
+    sim.host_write("b")
+    sim.kernel("k", flops=1e6, reads=["a", "b"], writes=[])
+    r = sim.finish()
+    assert r.n_evictions > 0
+    assert r.dtoh_bytes > 0                # evicted migrated pages copy back
+
+
+def test_read_mostly_eviction_is_free_drop():
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", int(0.8 * GB))
+    sim.alloc("b", int(0.8 * GB))
+    sim.host_write("a")
+    sim.host_write("b")
+    sim.advise_read_mostly("a")
+    sim.advise_read_mostly("b")
+    sim.kernel("k", flops=1e6, reads=["a", "b"], writes=[])
+    r = sim.finish()
+    assert r.n_evictions > 0
+    assert r.n_dropped == r.n_evictions    # duplicates drop, no writeback
+    assert r.dtoh_bytes == 0
+
+
+def test_write_invalidates_read_mostly_duplicate():
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", 16 * MB)
+    sim.host_write("a")
+    sim.advise_read_mostly("a")
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])        # duplicates
+    assert all(sim.regions["a"].duplicated)
+    sim.host_write("a")                                        # invalidate
+    assert not any(sim.regions["a"].duplicated)
+
+
+def test_prefetch_eliminates_faults():
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", 128 * MB)
+    sim.host_write("a")
+    sim.prefetch("a")
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])
+    r = sim.finish()
+    assert r.n_faults == 0
+    assert r.fault_stall_s == 0
+    assert r.htod_bytes == 128 * MB        # same bytes, bulk rate
+
+
+def test_prefetch_overlaps_compute():
+    """Prefetch rides the copy stream: same bytes, less wall time than
+    fault-driven migration."""
+    def run(prefetch):
+        sim = UMSimulator(PCIE)
+        sim.alloc("a", 256 * MB)
+        sim.host_write("a")
+        if prefetch:
+            sim.prefetch("a")
+        sim.kernel("k", flops=1e12, reads=["a"], writes=[])
+        return sim.finish().total_s
+
+    assert run(True) < run(False)
+
+
+def test_remote_init_on_coherent_platform():
+    """PREFERRED_LOCATION(DEVICE)+ACCESSED_BY(HOST) before init: pages are
+    created device-side, host writes remotely, kernel runs fault-free (the
+    paper's P9 CG finding)."""
+    sim = UMSimulator(NVLINK)
+    sim.alloc("a", 128 * MB)
+    sim.advise_preferred_location("a", MemorySpace.DEVICE)
+    sim.advise_accessed_by("a", Accessor.HOST)
+    sim.host_write("a")
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])
+    r = sim.finish()
+    assert r.n_faults == 0
+    assert r.htod_bytes == 0
+    assert r.remote_bytes == 128 * MB
+
+
+def test_remote_init_falls_back_on_pcie():
+    """Same advises on PCIe: host cannot map device memory — pages stay
+    host-side and the kernel migrates them (paper: '[the page] will be
+    migrated as in the standard UM')."""
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", 128 * MB)
+    sim.advise_preferred_location("a", MemorySpace.DEVICE)
+    sim.advise_accessed_by("a", Accessor.HOST)
+    sim.host_write("a")
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])
+    assert sim.finish().htod_bytes == 128 * MB
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.integers(4, 600), min_size=1, max_size=6),
+    read_mostly=st.booleans(),
+    prefetch=st.booleans(),
+    iters=st.integers(1, 4),
+)
+def test_capacity_invariant(sizes, read_mostly, prefetch, iters):
+    """Device residency never exceeds capacity; byte counters are
+    non-negative and consistent with fault counts."""
+    sim = UMSimulator(PCIE)
+    names = []
+    for i, mb in enumerate(sizes):
+        nm = f"r{i}"
+        sim.alloc(nm, mb * MB)
+        sim.host_write(nm)
+        if read_mostly:
+            sim.advise_read_mostly(nm)
+        names.append(nm)
+    if prefetch:
+        for nm in names:
+            sim.prefetch(nm)
+            assert sim.device_used <= sim.device_capacity
+    for _ in range(iters):
+        sim.kernel("k", flops=1e6, reads=names, writes=[])
+        assert sim.device_used <= sim.device_capacity
+    r = sim.finish()
+    assert r.htod_bytes >= 0 and r.dtoh_bytes >= 0
+    assert r.total_s >= r.compute_s
+
+
+@settings(max_examples=20, deadline=None)
+@given(mb=st.integers(1, 900))
+def test_bytes_conservation_in_memory(mb):
+    """In-memory single pass: HtoD bytes == region size exactly; no
+    evictions, no DtoH."""
+    sim = UMSimulator(PCIE)
+    sim.alloc("a", mb * MB)
+    sim.host_write("a")
+    sim.kernel("k", flops=1.0, reads=["a"], writes=[])
+    r = sim.finish()
+    assert r.htod_bytes == mb * MB
+    assert r.dtoh_bytes == 0
+    assert r.n_evictions == 0
