@@ -4,39 +4,75 @@ Fig. 3  in-memory GPU-kernel time per app x platform x variant
 Fig. 6  oversubscribed GPU-kernel time (explicit = N/A)
 Fig. 4/7 breakdowns (compute / fault stall / HtoD / DtoH) for traced apps
 Tab. I  working-set sizes per regime
+ext     the extended sweep: grace-hopper-c2c platform + 200 % regime
 
 All cells run through the calibrated UM simulator (core/simulator.py);
 numeric correctness of each app's real JAX implementation is covered by
-tests/test_umbench_numeric.py.
+tests/test_umbench_numeric.py.  The seed matrix is simulated ONCE (memoized)
+and every table indexes into it — the tables are views of one sweep, not
+independent re-runs.
 """
 from __future__ import annotations
 
 from repro.core.simulator import GB
-from repro.umbench.harness import REGIMES, run_cell, run_matrix, speedup_vs_um
+from repro.umbench.harness import (
+    EXTENDED_PLATFORMS,
+    REGIMES,
+    CellResult,
+    default_workers,
+    run_matrix,
+    speedup_vs_um,
+)
 from repro.umbench.platforms import PLATFORMS
 
 APPS = ("bs", "cublas", "cg", "graph500", "conv0", "conv1", "conv2", "fdtd3d")
 PLATS = ("intel-pascal-pcie", "intel-volta-pcie", "p9-volta-nvlink")
 VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
 
+_MATRIX: list[CellResult] | None = None
+_EXTENDED: list[CellResult] | None = None
+
+
+def matrix_cells(extended: bool = False) -> list[CellResult]:
+    """The (memoized) matrix sweep; ``extended`` adds grace-hopper-c2c and
+    the 200 % regime on top of the seed 240 cells."""
+    global _MATRIX, _EXTENDED
+    if extended:
+        if _EXTENDED is None:
+            _EXTENDED = run_matrix(
+                platform_names=EXTENDED_PLATFORMS,
+                regimes=("in_memory", "oversubscribed", "oversubscribed_2x"),
+                workers=default_workers(),
+            )
+        return _EXTENDED
+    if _MATRIX is None:
+        _MATRIX = run_matrix()
+    return _MATRIX
+
+
+def _index(cells) -> dict[tuple, CellResult]:
+    return {(c.app, c.platform, c.variant, c.regime): c for c in cells}
+
 
 def table_fig3_in_memory() -> list[str]:
+    cells = _index(matrix_cells())
     rows = ["table,app,platform,variant,total_s,derived"]
     for plat in PLATS:
         for app in APPS:
             for variant in VARIANTS:
-                cell = run_cell(app, PLATFORMS[plat], variant, "in_memory")
+                cell = cells[(app, plat, variant, "in_memory")]
                 t = "NA" if cell.total_s is None else f"{cell.total_s:.4f}"
                 rows.append(f"fig3,{app},{plat},{variant},{t},in_memory")
     return rows
 
 
 def table_fig6_oversubscribed() -> list[str]:
+    cells = _index(matrix_cells())
     rows = ["table,app,platform,variant,total_s,derived"]
     for plat in PLATS:
         for app in APPS:
             for variant in VARIANTS:
-                cell = run_cell(app, PLATFORMS[plat], variant, "oversubscribed")
+                cell = cells[(app, plat, variant, "oversubscribed")]
                 t = "NA" if cell.total_s is None else f"{cell.total_s:.4f}"
                 rows.append(f"fig6,{app},{plat},{variant},{t},oversubscribed")
     return rows
@@ -44,12 +80,13 @@ def table_fig6_oversubscribed() -> list[str]:
 
 def table_fig4_7_breakdowns() -> list[str]:
     """Traced apps (BS, CG, FDTD3d) stacked-bar decomposition."""
+    cells = _index(matrix_cells())
     rows = ["table,app,platform,regime,variant,compute_s,fault_stall_s,htod_s,dtoh_s"]
     for app in ("bs", "cg", "fdtd3d"):
         for plat in ("intel-pascal-pcie", "p9-volta-nvlink"):
             for regime in ("in_memory", "oversubscribed"):
                 for variant in ("um", "um_advise", "um_prefetch", "um_both"):
-                    r = run_cell(app, PLATFORMS[plat], variant, regime).report
+                    r = cells[(app, plat, variant, regime)].report
                     rows.append(
                         f"fig4_7,{app},{plat},{regime},{variant},"
                         f"{r.compute_s:.4f},{r.fault_stall_s:.4f},"
@@ -60,7 +97,7 @@ def table_fig4_7_breakdowns() -> list[str]:
 
 def table_claims_summary() -> list[str]:
     """The paper's five headline claims as measured speedups vs basic UM."""
-    sp = speedup_vs_um(run_matrix())
+    sp = speedup_vs_um(matrix_cells())
     rows = ["table,claim,measured,expectation"]
     rows.append(
         "claims,intel_oversub_advise_bs,"
@@ -82,6 +119,22 @@ def table_claims_summary() -> list[str]:
     rows.append(
         f"claims,p9_inmem_prefetch_cg,{p9:.2f}x,"
         "< intel (paper: little benefit on P9)")
+    return rows
+
+
+def table_extended_sweep() -> list[str]:
+    """Beyond-paper cells: grace-hopper-c2c across regimes and the 200 %
+    stress regime on every platform (speedup vs basic UM per cell)."""
+    cells = matrix_cells(extended=True)
+    sp = speedup_vs_um(cells)
+    rows = ["table,app,platform,regime,variant,total_s,speedup_vs_um"]
+    for c in cells:
+        if c.platform != "grace-hopper-c2c" and c.regime != "oversubscribed_2x":
+            continue
+        t = "NA" if c.total_s is None else f"{c.total_s:.4f}"
+        s = sp.get((c.app, c.platform, c.regime, c.variant))
+        s = "NA" if s is None else f"{s:.2f}"
+        rows.append(f"ext,{c.app},{c.platform},{c.regime},{c.variant},{t},{s}")
     return rows
 
 

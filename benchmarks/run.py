@@ -1,41 +1,85 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark entry point:  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""Benchmark entry point:  PYTHONPATH=src python -m benchmarks.run [--fast] [--json]
 
 Emits, as CSV blocks:
   fig3/fig6     the paper's in-memory/oversubscribed tables (simulated UM)
   fig4_7        traced-app breakdowns (compute/stall/HtoD/DtoH)
   claims        headline-claim summary vs paper expectations
+  ext           extended sweep (grace-hopper-c2c + 200 % regime) [not --fast]
   table1        working-set sizing
   lm            per-arch reduced train/decode step timings (real CPU)
   kernel        Pallas-kernel call timings (interpret mode) vs jnp oracle
   roofline      §Roofline terms per (arch x shape) from dry-run artifacts
   dryrun        §Dry-run compile/memory summary, both meshes
+
+``--json`` additionally writes BENCH_umbench.json: wall-clock seconds per
+block, the simulated totals of every matrix cell, and the seed-baseline
+speedup — the perf-trajectory artifact future PRs regress against.
 """
 from __future__ import annotations
 
+import json
 import sys
+import time
+
+# Wall-clock of the seed (pure-Python per-chunk) engine on the 240-cell
+# matrix, measured on the PR-1 reference container.  The vectorized engine's
+# acceptance gate is >=10x against this; future PRs track matrix_240_wall_s
+# in BENCH_umbench.json instead of re-running the seed oracle.
+SEED_BASELINE_MATRIX_240_S = 58.8
 
 
 def main() -> None:
     fast = "--fast" in sys.argv
+    emit_json = "--json" in sys.argv
     from benchmarks import lm_bench, paper_tables, roofline
 
-    blocks: list[list[str]] = [
-        paper_tables.table_claims_summary(),
-        paper_tables.table_working_sets(),
-        paper_tables.table_fig3_in_memory(),
-        paper_tables.table_fig6_oversubscribed(),
-        paper_tables.table_fig4_7_breakdowns(),
-    ]
+    timings: dict[str, float] = {}
+    blocks: list[list[str]] = []
+
+    def timed(name: str, fn) -> None:
+        t0 = time.perf_counter()
+        blocks.append(fn())
+        timings[name] = round(time.perf_counter() - t0, 3)
+
+    t0 = time.perf_counter()
+    paper_tables.matrix_cells()
+    matrix_wall = time.perf_counter() - t0
+    timings["matrix_240"] = round(matrix_wall, 3)
+
+    timed("claims", paper_tables.table_claims_summary)
+    timed("table1", paper_tables.table_working_sets)
+    timed("fig3", paper_tables.table_fig3_in_memory)
+    timed("fig6", paper_tables.table_fig6_oversubscribed)
+    timed("fig4_7", paper_tables.table_fig4_7_breakdowns)
     if not fast:
-        blocks.append(lm_bench.kernel_rows())
-        blocks.append(lm_bench.arch_step_rows())
-    blocks.append(roofline.roofline_rows())
-    blocks.append(roofline.dryrun_rows())
+        timed("ext", paper_tables.table_extended_sweep)
+        timed("kernel", lm_bench.kernel_rows)
+        timed("lm", lm_bench.arch_step_rows)
+    timed("roofline", roofline.roofline_rows)
+    timed("dryrun", roofline.dryrun_rows)
+
     for block in blocks:
         for line in block:
             print(line)
         print()
+
+    if emit_json:
+        cells = paper_tables.matrix_cells(extended=not fast)
+        payload = {
+            "matrix_240_wall_s": round(matrix_wall, 3),
+            "seed_baseline_240_wall_s": SEED_BASELINE_MATRIX_240_S,
+            "speedup_vs_seed": round(SEED_BASELINE_MATRIX_240_S
+                                     / max(matrix_wall, 1e-9), 1),
+            "block_wall_s": timings,
+            "n_cells": len(cells),
+            "cells": [c.row() for c in cells],
+        }
+        with open("BENCH_umbench.json", "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote BENCH_umbench.json ({len(cells)} cells, "
+              f"matrix {matrix_wall:.2f}s, "
+              f"{payload['speedup_vs_seed']}x vs seed)")
 
 
 if __name__ == '__main__':

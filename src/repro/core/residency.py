@@ -1,4 +1,6 @@
-"""ResidencyPlanner — oversubscription management (paper §II-D), planned.
+"""ResidencyPlanner — oversubscription management (paper §II-D), planned —
+plus the array-backed residency-order primitives the vectorized UM simulator
+uses for LRU victim selection (DESIGN.md §Simulator internals).
 
 CUDA UM reacts to memory pressure with page faults + LRU eviction.  A TPU
 runtime cannot fault, so the planner decides residency *ahead of time*: given
@@ -21,10 +23,64 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.configs.base import ArchConfig, MeshConfig, ShapeConfig
 from repro.core.advise import MemorySpace
 
 GB = 1024**3
+
+
+# ---------------------------------------------------------------------------
+# Vectorized residency order (consumed by repro.core.simulator)
+# ---------------------------------------------------------------------------
+#
+# The seed simulator kept two OrderedDicts — an unpinned queue (evicted
+# first) and a pinned queue (last resort) — and popped chunks one at a time.
+# The vectorized engine replaces queue *position* with a monotonically
+# increasing int64 stamp per resident chunk: insertion and LRU-touch both
+# assign the next stamp, so ascending stamp order within a queue is exactly
+# the OrderedDict pop order.  Victim selection then becomes an argsort plus
+# a cumulative-sum cut instead of a per-chunk pop loop.
+
+def victim_order(stamp: np.ndarray, in_pin_queue: np.ndarray,
+                 pinned_now: np.ndarray) -> tuple[np.ndarray, bool]:
+    """Seed-equivalent eviction order over gathered resident chunks.
+
+    Returns ``(order, anomaly)`` where ``order`` indexes the gathered arrays
+    in the order the seed model would pop them: the unpinned queue in stamp
+    order, then the pinned queue in stamp order.  ``anomaly`` is True when
+    any chunk's queue membership disagrees with its region's *current* pin
+    state — the seed reclassifies such chunks lazily at pop time, which the
+    batched cut cannot reproduce, so callers must take a scalar path.
+    """
+    anomaly = bool(np.any(in_pin_queue != pinned_now))
+    un = np.nonzero(~in_pin_queue)[0]
+    pin = np.nonzero(in_pin_queue)[0]
+    # stable (timsort) exploits the near-sorted runs that per-region batch
+    # insertion produces — measurably faster than quicksort here
+    order = np.concatenate(
+        [un[np.argsort(stamp[un], kind="stable")],
+         pin[np.argsort(stamp[pin], kind="stable")]]
+    )
+    return order, anomaly
+
+
+def eviction_cut(sizes_in_order: np.ndarray, need_free: int) -> int | None:
+    """How many victims (a prefix of the pop order) free ``need_free`` bytes.
+
+    Mirrors the seed's ``while used + need > capacity: pop()`` loop: the
+    minimal prefix whose byte sum reaches ``need_free``.  Returns None when
+    even evicting everything falls short (the seed then raises
+    OversubscriptionError after draining both queues).
+    """
+    if need_free <= 0:
+        return 0
+    csum = np.cumsum(sizes_in_order)
+    if len(csum) == 0 or int(csum[-1]) < need_free:
+        return None
+    return int(np.searchsorted(csum, need_free, side="left")) + 1
+
 
 HBM_PER_DEVICE_BYTES = 16 * GB          # TPU v5e-class
 HBM_HEADROOM = 0.92                     # XLA fragmentation/scratch headroom

@@ -19,11 +19,12 @@ fault-level behaviour is reproduced here: a page/chunk-granular model of
             duplication in full fault groups (2 MB) — same fault count as
             migration, so advise is ~neutral in-memory and *wins*
             oversubscribed (dropped evictions).
-          * Coherent fabrics (P9/NVLink ATS): duplication skips the host
-            unmap/TLB-shootdown, halving fault latency in-memory (advise
-            wins), BUT under memory pressure the block heuristic is
-            disabled and re-duplication faults at system page granularity
-            (64 KB) — the fault explosion the paper traces in Fig. 7c/8c.
+          * Coherent fabrics (P9/NVLink ATS, Grace Hopper C2C): duplication
+            skips the host unmap/TLB-shootdown, halving fault latency
+            in-memory (advise wins), BUT under memory pressure the block
+            heuristic is disabled and re-duplication faults at system page
+            granularity (64 KB) — the fault explosion the paper traces in
+            Fig. 7c/8c.
       - PREFERRED_LOCATION: pins pages; under memory pressure pinned pages
         are evicted only as a last resort (CUDA treats the advise as a hint).
         If the accessor cannot remote-map the target memory, falls back to
@@ -38,15 +39,35 @@ Timing model: one device (compute) stream and one copy stream.  Page faults
 stall the compute stream (massive parallelism means a faulting kernel makes
 no progress — paper §II-A).  The report exposes the same breakdown as the
 paper's Fig. 4/7: compute, fault stall, HtoD time, DtoH time.
+
+Implementation (DESIGN.md §Simulator internals): per-region chunk state is
+NumPy arrays (``on_device`` / ``duplicated`` / ``populated`` / ``arrival`` /
+``stamp``), residency order is a monotone int64 stamp instead of the seed's
+OrderedDict queues, and every public call processes whole chunk-index runs
+with batched fault-group, transfer-time, and eviction accounting.  The seed
+per-chunk model is preserved verbatim in ``repro.core.seed_simulator`` and
+tests/test_simulator_parity.py proves the two agree counter-for-counter.
+Rare orderings the batched cut cannot express (lazy pin reclassification,
+eviction dipping into the batch being inserted) fall back to exact scalar
+paths.
+
+Granularity: ``UMSimulator(..., granularity="page")`` allocates at the
+64 KB system-page size instead of the 2 MB fault group, modelling the
+coherent-fabric fault explosion *directly* (one fault per page under
+pressure) instead of via the seed's ``size // page_bytes`` shortcut.  Fault
+events outside the pressure path coalesce per 2 MB group span so in-memory
+fault counts stay comparable across granularities.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from collections import OrderedDict
 from typing import Mapping
 
+import numpy as np
+
 from repro.core.advise import Accessor, AdvisePolicy, MemorySpace
+from repro.core.residency import eviction_cut, victim_order
 
 KB = 1024
 MB = 1024 * KB
@@ -75,44 +96,50 @@ class SimPlatform:
     fault_migration_efficiency: float = 1.0
 
 
-@dataclasses.dataclass
 class Region:
-    name: str
-    nbytes: int
-    role: str = "data"
-    # advise state
-    read_mostly: bool = False
-    preferred: MemorySpace | None = None
-    accessed_by: tuple[Accessor, ...] = ()
-    # residency state, chunk-granular
-    chunk_bytes: int = 2 * MB
-    nchunks: int = 0
-    # per-chunk: where the authoritative copy lives
-    loc: list[MemorySpace] = dataclasses.field(default_factory=list)
-    # per-chunk: device holds a read-only duplicate (host copy also valid)
-    duplicated: list[bool] = dataclasses.field(default_factory=list)
-    # per-chunk arrival time on the copy stream (for in-flight prefetches)
-    arrival: list[float] = dataclasses.field(default_factory=list)
-    # per-chunk: has real data been written yet (virgin pages move for free)
-    populated: list[bool] = dataclasses.field(default_factory=list)
-    # rotating cursor for partial (data-dependent) accesses, e.g. BFS levels
-    cursor: int = 0
+    """Chunk-granular state of one managed allocation, as NumPy arrays.
 
-    def __post_init__(self):
-        self.nchunks = max(1, math.ceil(self.nbytes / self.chunk_bytes))
-        self.loc = [MemorySpace.HOST] * self.nchunks
-        self.duplicated = [False] * self.nchunks
-        self.arrival = [0.0] * self.nchunks
-        self.populated = [False] * self.nchunks
+    ``on_device`` is the authoritative-copy location (seed ``loc``);
+    ``duplicated`` marks read-mostly device duplicates (host copy valid);
+    ``stamp``/``in_pin_queue`` encode the residency order (see
+    residency.victim_order); ``arrival`` is the copy-stream completion time
+    of in-flight prefetches.  A chunk is device-resident iff
+    ``on_device | duplicated``.
+    """
+
+    def __init__(self, name: str, nbytes: int, role: str = "data",
+                 chunk_bytes: int = 2 * MB):
+        self.name = name
+        self.nbytes = int(nbytes)
+        self.role = role
+        self.chunk_bytes = int(chunk_bytes)
+        # advise state
+        self.read_mostly = False
+        self.preferred: MemorySpace | None = None
+        self.accessed_by: tuple[Accessor, ...] = ()
+        # rotating cursor for partial (data-dependent) accesses, e.g. BFS
+        self.cursor = 0
+        n = max(1, math.ceil(self.nbytes / self.chunk_bytes))
+        self.nchunks = n
+        sizes = np.full(n, self.chunk_bytes, dtype=np.int64)
+        rem = self.nbytes - (n - 1) * self.chunk_bytes
+        sizes[-1] = rem if rem > 0 else self.chunk_bytes
+        self.sizes = sizes
+        self.on_device = np.zeros(n, dtype=bool)
+        self.duplicated = np.zeros(n, dtype=bool)
+        self.populated = np.zeros(n, dtype=bool)
+        self.arrival = np.zeros(n, dtype=np.float64)
+        self.stamp = np.zeros(n, dtype=np.int64)
+        self.in_pin_queue = np.zeros(n, dtype=bool)
 
     def chunk_size(self, idx: int) -> int:
-        if idx == self.nchunks - 1:
-            rem = self.nbytes - idx * self.chunk_bytes
-            return rem if rem > 0 else self.chunk_bytes
-        return self.chunk_bytes
+        return int(self.sizes[idx])
+
+    def resident_mask(self) -> np.ndarray:
+        return self.on_device | self.duplicated
 
     def device_resident(self, idx: int) -> bool:
-        return self.loc[idx] is MemorySpace.DEVICE or self.duplicated[idx]
+        return bool(self.on_device[idx] or self.duplicated[idx])
 
 
 @dataclasses.dataclass
@@ -147,42 +174,28 @@ class OversubscriptionError(RuntimeError):
     case does not exist with original versions with explicit allocation')."""
 
 
+GRANULARITIES = ("group", "page")
+
+
 class UMSimulator:
-    def __init__(self, platform: SimPlatform, policy: AdvisePolicy | None = None):
+    def __init__(self, platform: SimPlatform, policy: AdvisePolicy | None = None,
+                 granularity: str = "group"):
+        if granularity not in GRANULARITIES:
+            raise ValueError(f"granularity must be one of {GRANULARITIES}")
         self.p = platform
         self.policy = policy or AdvisePolicy()
+        self.granularity = granularity
+        self.chunk_bytes = (platform.page_bytes if granularity == "page"
+                            else platform.fault_group_bytes)
         self.regions: dict[str, Region] = {}
         self.report = SimReport()
         self.t_device = 0.0          # compute stream clock
         self.t_copy = 0.0            # copy stream clock
         self.device_used = 0         # bytes resident on device
-        # FIFO residency order (approximate LRU): (region_name, chunk_idx).
-        # Two queues: unpinned (evicted first) and pinned (last resort —
-        # PREFERRED_LOCATION(DEVICE) is a hint, not a guarantee).  Membership
-        # is reclassified lazily at pop time if advises changed.
-        self._res_un: OrderedDict[tuple[str, int], bool] = OrderedDict()
-        self._res_pin: OrderedDict[tuple[str, int], bool] = OrderedDict()
+        self._clock = 0              # residency-order stamp source
         # set once eviction has happened: the memory-pressure regime in which
         # coherent platforms lose the block-duplication heuristic (see header)
         self._pressure = False
-
-    def _is_pinned(self, key: tuple[str, int]) -> bool:
-        return self.regions[key[0]].preferred is MemorySpace.DEVICE
-
-    def _resident_contains(self, key) -> bool:
-        return key in self._res_un or key in self._res_pin
-
-    def _resident_remove(self, key) -> bool:
-        if key in self._res_un:
-            self._res_un.pop(key)
-            return True
-        if key in self._res_pin:
-            self._res_pin.pop(key)
-            return True
-        return False
-
-    def _resident_add(self, key) -> None:
-        (self._res_pin if self._is_pinned(key) else self._res_un)[key] = True
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -193,7 +206,7 @@ class UMSimulator:
     def alloc(self, name: str, nbytes: int, role: str = "data") -> Region:
         if name in self.regions:
             raise ValueError(f"region {name} exists")
-        r = Region(name, int(nbytes), role=role, chunk_bytes=self.p.fault_group_bytes)
+        r = Region(name, int(nbytes), role=role, chunk_bytes=self.chunk_bytes)
         self.regions[name] = r
         self._apply_policy(r)
         return r
@@ -218,33 +231,94 @@ class UMSimulator:
         # host then initializes device-resident pages via remote writes —
         # the paper's P9 in-memory win for CG/FDTD (§IV-A).
         if space is MemorySpace.DEVICE and self.p.host_can_access_device:
-            for i in range(r.nchunks):
-                if not r.populated[i] and not r.device_resident(i):
-                    if self.device_used + r.chunk_size(i) > self.device_capacity:
-                        break  # placement preference, not a guarantee
-                    self._mark_resident(r, i, duplicate=False)
+            cand = np.nonzero(~r.populated & ~r.resident_mask())[0]
+            if not len(cand):
+                return
+            free = self.device_capacity - self.device_used
+            csum = np.cumsum(r.sizes[cand])
+            # placement preference, not a guarantee: stop at the first
+            # candidate that does not fit
+            k = int(np.searchsorted(csum, free, side="right"))
+            if k:
+                self._insert_resident(r, cand[:k], duplicate=False)
 
     def advise_accessed_by(self, name: str, accessor: Accessor) -> None:
         r = self.regions[name]
         r.accessed_by = r.accessed_by + (accessor,)
 
     # -- residency bookkeeping -------------------------------------------------
-    def _mark_resident(self, r: Region, idx: int, *, duplicate: bool) -> None:
-        key = (r.name, idx)
-        if not self._resident_remove(key):
-            self.device_used += r.chunk_size(idx)
-        self._resident_add(key)
-        if duplicate:
-            r.duplicated[idx] = True           # host copy stays valid
-        else:
-            r.loc[idx] = MemorySpace.DEVICE
+    def _stamps(self, n: int) -> np.ndarray:
+        s = np.arange(self._clock, self._clock + n, dtype=np.int64)
+        self._clock += n
+        return s
 
-    def _touch(self, r: Region, idx: int) -> None:
-        key = (r.name, idx)
-        if key in self._res_un:
-            self._res_un.move_to_end(key)
-        elif key in self._res_pin:
-            self._res_pin.move_to_end(key)
+    def _insert_resident(self, r: Region, ids: np.ndarray, *, duplicate) -> None:
+        """Batch _mark_resident for chunks known to be non-resident.
+
+        ``duplicate`` is a scalar bool or a per-chunk bool array.  Stamps are
+        assigned in ``ids`` order — exactly the seed's insertion order.
+        """
+        self.device_used += int(r.sizes[ids].sum())
+        r.stamp[ids] = self._stamps(len(ids))
+        r.in_pin_queue[ids] = r.preferred is MemorySpace.DEVICE
+        dup = np.broadcast_to(np.asarray(duplicate, dtype=bool), (len(ids),))
+        r.duplicated[ids[dup]] = True
+        r.on_device[ids[~dup]] = True
+
+    def _touch(self, r: Region, ids: np.ndarray) -> None:
+        """Move touched chunks to the back of their queue (seed move_to_end):
+        re-stamping preserves relative order within each queue."""
+        r.stamp[ids] = self._stamps(len(ids))
+
+    def _gather_resident(self):
+        """Concatenate (region, chunk, stamp, size, dup, in_pin, pinned_now)
+        over all device-resident chunks — the materialized residency queues."""
+        rlist = []
+        regs, idxs, stamps, sizes, dups, pinq, pnow = [], [], [], [], [], [], []
+        for r in self.regions.values():
+            ids = np.nonzero(r.resident_mask())[0]
+            if not len(ids):
+                continue
+            regs.append(np.full(len(ids), len(rlist), dtype=np.int64))
+            rlist.append(r)
+            idxs.append(ids)
+            stamps.append(r.stamp[ids])
+            sizes.append(r.sizes[ids])
+            dups.append(r.duplicated[ids])
+            pinq.append(r.in_pin_queue[ids])
+            pnow.append(np.full(len(ids), r.preferred is MemorySpace.DEVICE))
+        if not idxs:
+            return None
+        return (rlist, np.concatenate(regs), np.concatenate(idxs),
+                np.concatenate(stamps), np.concatenate(sizes),
+                np.concatenate(dups), np.concatenate(pinq),
+                np.concatenate(pnow))
+
+    def _apply_evictions(self, rlist, reg_ids, chunk_ids, sizes, dups) -> None:
+        """State + accounting for a batch of victims (order-independent:
+        all per-victim effects are additive)."""
+        n = len(chunk_ids)
+        if not n:
+            return
+        self.device_used -= int(sizes.sum())
+        self.report.n_evictions += n
+        ndrop = int(dups.sum())
+        self.report.n_dropped += ndrop
+        mig = ~dups
+        if mig.any():
+            msz = sizes[mig]
+            t = float((msz / (self.p.link_bw_gbs * GB)).sum())
+            self.report.dtoh_s += t
+            self.report.dtoh_bytes += int(msz.sum())
+            # eviction write-back is on the critical path of the allocation
+            # that triggered it
+            self.t_device += t
+        for ri in np.unique(reg_ids):
+            r = rlist[ri]
+            ids = chunk_ids[reg_ids == ri]
+            d = dups[reg_ids == ri]
+            r.duplicated[ids[d]] = False       # free drop (host copy valid)
+            r.on_device[ids[~d]] = False       # migrated back to host
 
     def _evict_for(self, need: int) -> None:
         """Evict least-recently-resident chunks until `need` bytes fit.
@@ -255,53 +329,81 @@ class UMSimulator:
         pay a DtoH transfer — UM *moves* pages, so the host has no copy.
         """
         self._pressure = True
+        need_free = self.device_used + need - self.device_capacity
+        if need_free <= 0:
+            return
+        g = self._gather_resident()
+        if g is None:
+            raise OversubscriptionError(f"cannot free {need} bytes")
+        rlist, regs, idxs, stamps, sizes, dups, pinq, pnow = g
+        order, anomaly = victim_order(stamps, pinq, pnow)
+        if anomaly:
+            self._evict_for_scalar(need)
+            return
+        cut = eviction_cut(sizes[order], need_free)
+        if cut is None:
+            self._apply_evictions(rlist, regs[order], idxs[order],
+                                  sizes[order], dups[order])
+            raise OversubscriptionError(f"cannot free {need} bytes")
+        sel = order[:cut]
+        self._apply_evictions(rlist, regs[sel], idxs[sel], sizes[sel], dups[sel])
+
+    def _evict_for_scalar(self, need: int) -> None:
+        """Pop-by-pop eviction replicating the seed's lazy queue
+        reclassification (a region's pin advise changed after its chunks
+        were filed).  Only reached when victim_order flags an anomaly."""
         while self.device_used + need > self.device_capacity:
-            if self._res_un:
-                key, _ = self._res_un.popitem(last=False)
-                if self._is_pinned(key):      # advise changed since insert
-                    self._res_pin[key] = True
-                    continue
-            elif self._res_pin:
-                key, _ = self._res_pin.popitem(last=False)
-                if not self._is_pinned(key):  # un-pinned since insert
-                    self._res_un[key] = True
-                    continue
-            else:
+            g = self._gather_resident()
+            if g is None:
                 raise OversubscriptionError(f"cannot free {need} bytes")
-            r = self.regions[key[0]]
-            idx = key[1]
-            size = r.chunk_size(idx)
-            self.device_used -= size
-            self.report.n_evictions += 1
-            if r.duplicated[idx]:
-                r.duplicated[idx] = False   # free drop (host copy valid)
-                self.report.n_dropped += 1
+            rlist, regs, idxs, stamps, sizes, dups, pinq, pnow = g
+            un = np.nonzero(~pinq)[0]
+            if len(un):
+                j = un[np.argmin(stamps[un])]
+                r = rlist[regs[j]]
+                if pnow[j]:                  # advise changed since insert
+                    r.in_pin_queue[idxs[j]] = True
+                    r.stamp[idxs[j]] = self._stamps(1)[0]
+                    continue
             else:
-                # migrate back to host; eviction is on the critical path of
-                # the allocation that triggered it.
-                t = size / (self.p.link_bw_gbs * GB)
-                self.report.dtoh_s += t
-                self.report.dtoh_bytes += size
-                self.t_device += t
-                r.loc[idx] = MemorySpace.HOST
+                pin = np.nonzero(pinq)[0]
+                j = pin[np.argmin(stamps[pin])]
+                r = rlist[regs[j]]
+                if not pnow[j]:              # un-pinned since insert
+                    r.in_pin_queue[idxs[j]] = False
+                    r.stamp[idxs[j]] = self._stamps(1)[0]
+                    continue
+            self._apply_evictions(rlist, regs[j:j + 1], idxs[j:j + 1],
+                                  sizes[j:j + 1], dups[j:j + 1])
+
+    # -- fault-event coalescing -------------------------------------------------
+    def _n_fault_events(self, r: Region, ids: np.ndarray) -> int:
+        """Fault events for a set of faulting chunks.  At group granularity
+        each chunk is one event (the seed model).  At page granularity the
+        driver's density heuristic still resolves faults per 2 MB group span,
+        so events coalesce — except on the pressure/duplication path, which
+        bypasses this helper entirely (one fault per page: Fig. 7c/8c)."""
+        if self.granularity == "group" or r.chunk_bytes >= self.p.fault_group_bytes:
+            return len(ids)
+        groups = (ids.astype(np.int64) * r.chunk_bytes) // self.p.fault_group_bytes
+        return len(np.unique(groups))
 
     # -- transfers ---------------------------------------------------------------
-    def _fault_migrate(self, r: Region, idx: int, *, duplicate: bool) -> None:
-        """Device-side fault: stall compute for fault handling + transfer.
-
-        Platform-dependent duplication cost — see class docstring."""
-        size = r.chunk_size(idx)
+    def _fault_one(self, r: Region, idx: int, *, duplicate: bool) -> None:
+        """Scalar fault path — seed `_fault_migrate` verbatim.  Used when the
+        batched fault path cannot prove the seed's eviction interleaving
+        (victims inside the faulting batch itself)."""
+        size = int(r.sizes[idx])
         if self.device_used + size > self.device_capacity:
             self._evict_for(size)
+        one = np.array([idx])
         if not r.populated[idx]:
-            # first touch of a virgin page by the device: populate on the
-            # device — fault latency only, nothing to copy
             stall = self.p.fault_latency_us * 1e-6
             self.t_device += stall
             self.report.fault_stall_s += stall
             self.report.n_faults += 1
             r.populated[idx] = True
-            self._mark_resident(r, idx, duplicate=False)
+            self._insert_resident(r, one, duplicate=False)
             return
         groups = 1
         latency = self.p.fault_latency_us
@@ -317,10 +419,201 @@ class UMSimulator:
         self.report.htod_s += xfer
         self.report.htod_bytes += size
         self.report.n_faults += groups
-        self._mark_resident(r, idx, duplicate=duplicate)
+        self._insert_resident(r, one, duplicate=duplicate)
 
-    def _bulk_copy_chunk(self, r: Region, idx: int, *, duplicate: bool, asynchronous: bool) -> None:
-        size = r.chunk_size(idx)
+    def _plan_victims(self, r: Region, ids: np.ndarray, need: np.ndarray,
+                      own_dup: np.ndarray):
+        """Victim plan for inserting the batch ``ids`` into ``r``.
+
+        ``need[i]`` is the byte deficit before chunk i's insertion.  Returns
+        the victims in the seed's exact pop order — the old unpinned queue
+        (stamp order) first, the old pinned queue last-resort, with the
+        batch's own just-inserted chunks interleaved wherever the seed would
+        pop them — plus ``m[i]``, the number of victims consumed before chunk
+        i's insertion.  When the deficit is covered by a pure prefix of the
+        old queues this is a cumsum cut; otherwise an O(n) integer merge
+        replays the seed's queue dynamics (own chunks join their region's
+        queue as they are inserted and may be evicted by later chunks of the
+        same batch — the streaming-thrash regime).  Returns None when pin
+        reclassification anomalies exist or the deficit cannot be covered at
+        all (the seed then raises); callers take the scalar path.
+        """
+        region_pinned = r.preferred is MemorySpace.DEVICE
+        g = self._gather_resident()
+        if g is None:
+            rlist = []
+            order = np.zeros(0, dtype=np.int64)
+            n_un = n_old = 0
+            o_sizes = np.zeros(0, dtype=np.int64)
+            regs = idxs = np.zeros(0, dtype=np.int64)
+            dups = np.zeros(0, dtype=bool)
+        else:
+            rlist, regs, idxs, stamps, szs, dups, pinq, pnow = g
+            order, anomaly = victim_order(stamps, pinq, pnow)
+            if anomaly:
+                return None
+            n_un = int((~pinq).sum())
+            n_old = len(order)
+            o_sizes = szs[order]
+        sizes = r.sizes[ids]
+        n_own = len(ids)
+        need_total = int(need[-1])
+        old_bytes = int(o_sizes.sum())
+        un_bytes = int(o_sizes[:n_un].sum())
+        if need_total <= un_bytes or (region_pinned and need_total <= old_bytes):
+            # pure old-queue prefix: no own-batch chunk can be popped before
+            # the deficit is covered
+            vcum = np.cumsum(o_sizes)
+            m = np.where(need > 0,
+                         np.searchsorted(vcum, np.maximum(need, 0),
+                                         side="left") + 1,
+                         0)
+            M = int(m[-1])
+            sel = order[:M]
+            return {
+                "rlist": rlist,
+                "old": (regs[sel], idxs[sel], o_sizes[:M], dups[sel]),
+                "own_evicted": np.zeros(0, dtype=np.int64),
+                "m": m, "v_dup": dups[sel], "v_sizes": o_sizes[:M],
+            }
+        # exact replay of the seed's pop interleaving, O(n) integer ops.
+        # Old-queue consumption is bounded by the prefix covering the full
+        # deficit, so only that slice is materialized as Python ints.
+        free = self.device_capacity - self.device_used
+        bound = eviction_cut(o_sizes, need_total)
+        bound = n_old if bound is None else bound
+        osz = o_sizes[:bound].tolist()
+        szl = sizes.tolist()
+        vict: list[int] = []        # >= 0: old queue position; ~j: own chunk j
+        m = np.zeros(n_own, dtype=np.int64)
+        un_cur, pin_cur, own_cur = 0, n_un, 0
+        for i in range(n_own):
+            s = szl[i]
+            while free < s:
+                if un_cur < n_un:
+                    free += osz[un_cur]
+                    vict.append(un_cur)
+                    un_cur += 1
+                elif not region_pinned and own_cur < i:
+                    free += szl[own_cur]
+                    vict.append(~own_cur)
+                    own_cur += 1
+                elif pin_cur < n_old:
+                    free += osz[pin_cur]
+                    vict.append(pin_cur)
+                    pin_cur += 1
+                elif region_pinned and own_cur < i:
+                    free += szl[own_cur]
+                    vict.append(~own_cur)
+                    own_cur += 1
+                else:
+                    return None     # both queues drained: the seed raises
+            free -= s
+            m[i] = len(vict)
+        va = np.array(vict, dtype=np.int64)
+        own_mask = va < 0
+        own_idx = ~va[own_mask]
+        old_pos = va[~own_mask]
+        old_orig = order[old_pos]
+        old_dups = dups[old_orig]
+        v_sizes = np.empty(len(va), dtype=np.int64)
+        v_dup = np.empty(len(va), dtype=bool)
+        v_sizes[~own_mask] = o_sizes[old_pos]
+        v_dup[~own_mask] = old_dups
+        v_sizes[own_mask] = sizes[own_idx]
+        v_dup[own_mask] = own_dup[own_idx]
+        return {
+            "rlist": rlist,
+            "old": (regs[old_orig], idxs[old_orig],
+                    o_sizes[old_pos], old_dups),
+            "own_evicted": own_idx,
+            "m": m, "v_dup": v_dup, "v_sizes": v_sizes,
+        }
+
+    def _commit_evictions(self, r: Region, plan) -> None:
+        """Apply a victim plan: old residents across regions, then the
+        batch's own evicted members (all effects are additive)."""
+        o_regs, o_idxs, o_sizes, o_dups = plan["old"]
+        self._apply_evictions(plan["rlist"], o_regs, o_idxs, o_sizes, o_dups)
+        own = plan["own_evicted"]
+        if len(own):
+            eids = np.asarray(plan["own_ids"])[own]
+            edup = np.asarray(plan["own_dup"])[own]
+            self._apply_evictions([r], np.zeros(len(eids), dtype=np.int64),
+                                  eids, r.sizes[eids], edup)
+        self._pressure = True
+
+    def _fault_batch(self, r: Region, ids: np.ndarray, *, duplicate: bool) -> None:
+        """Device-side faults for a run of non-resident chunks: batched
+        eviction, fault-group, and transfer accounting (seed-equivalent)."""
+        sizes = r.sizes[ids]
+        ins_cum = np.cumsum(sizes)
+        free0 = self.device_capacity - self.device_used
+        need_total = int(ins_cum[-1]) - free0
+        pressure0 = self._pressure
+        pressure_from = len(ids)         # batch index where pressure begins
+        virgin = ~r.populated[ids]
+        pm = ~virgin
+        own_dup = pm & duplicate
+        plan = None
+        if need_total > 0:
+            plan = self._plan_victims(r, ids, ins_cum - free0, own_dup)
+            if plan is None:
+                for i in ids:            # exact scalar fallback
+                    self._fault_one(r, int(i), duplicate=duplicate)
+                return
+            # the chunk whose insertion first exceeded capacity (and every
+            # later one) faults in the pressure regime
+            pressure_from = int(np.searchsorted(ins_cum, free0, side="right"))
+        lat = self.p.fault_latency_us * 1e-6
+        nv = int(virgin.sum())
+        if nv:
+            # first device touch of virgin pages: populate on the device —
+            # fault latency only, nothing to copy
+            events = self._n_fault_events(r, ids[virgin])
+            self.t_device += events * lat
+            self.report.fault_stall_s += events * lat
+            self.report.n_faults += events
+        if pm.any():
+            pids = ids[pm]
+            psz = sizes[pm]
+            if duplicate and self.p.host_can_access_device:   # coherent fabric
+                pressured = pressure0 | (np.nonzero(pm)[0] >= pressure_from)
+                if pressured.any():
+                    # block heuristic disabled: re-duplication faults at
+                    # system page granularity — the Fig. 7c/8c explosion
+                    pgroups = np.maximum(1, psz[pressured] // self.p.page_bytes)
+                    n_p = int(pgroups.sum())
+                    self.report.fault_stall_s += n_p * lat
+                    self.t_device += n_p * lat
+                    self.report.n_faults += n_p
+                if (~pressured).any():
+                    events = self._n_fault_events(r, pids[~pressured])
+                    stall = events * lat * 0.5                # no host unmap
+                    self.report.fault_stall_s += stall
+                    self.t_device += stall
+                    self.report.n_faults += events
+            else:
+                events = self._n_fault_events(r, pids)
+                self.report.fault_stall_s += events * lat
+                self.t_device += events * lat
+                self.report.n_faults += events
+            xfer = float((psz / (self.p.link_bw_gbs * GB
+                                 * self.p.fault_migration_efficiency)).sum())
+            self.t_device += xfer
+            self.report.htod_s += xfer
+            self.report.htod_bytes += int(psz.sum())
+        r.populated[ids] = True
+        self._insert_resident(r, ids, duplicate=own_dup)
+        if plan is not None:
+            plan["own_ids"] = ids
+            plan["own_dup"] = own_dup
+            self._commit_evictions(r, plan)
+
+    def _bulk_copy_one(self, r: Region, idx: int, *, duplicate: bool,
+                       asynchronous: bool) -> None:
+        """Scalar bulk-copy path — seed `_bulk_copy_chunk` verbatim."""
+        size = int(r.sizes[idx])
         if self.device_used + size > self.device_capacity:
             self._evict_for(size)
         xfer = size / (self.p.link_bw_gbs * GB)
@@ -333,46 +626,130 @@ class UMSimulator:
         self.report.htod_s += xfer
         self.report.htod_bytes += size
         r.populated[idx] = True
-        self._mark_resident(r, idx, duplicate=duplicate)
+        self._insert_resident(r, np.array([idx]), duplicate=duplicate)
+
+    def _bulk_copy_batch(self, r: Region, ids: np.ndarray, *, duplicate: bool,
+                         asynchronous: bool) -> None:
+        """Bulk copy a run of non-resident chunks at full link bandwidth,
+        reproducing the seed's per-chunk evict -> copy interleaving in closed
+        form (victim consumption via searchsorted; copy-stream clock via a
+        running-max recurrence)."""
+        sizes = r.sizes[ids]
+        x = sizes / (self.p.link_bw_gbs * GB)
+        ins_cum = np.cumsum(sizes)
+        free0 = self.device_capacity - self.device_used
+        need = ins_cum - free0           # bytes to free before each insert
+        if int(need[-1]) <= 0:
+            # fast path: everything fits
+            X = np.cumsum(x)
+            if asynchronous:
+                base = max(self.t_copy, self.t_device)
+                arr = base + X
+                self.t_copy = float(arr[-1])
+            else:
+                arr = self.t_device + X
+                self.t_device = float(arr[-1])
+            r.arrival[ids] = arr
+            self.report.htod_s += float(X[-1])
+            self.report.htod_bytes += int(ins_cum[-1])
+            r.populated[ids] = True
+            self._insert_resident(r, ids, duplicate=duplicate)
+            return
+        if not asynchronous or not self._bulk_copy_evicting(r, ids, duplicate):
+            for i in ids:                # exact scalar fallback
+                self._bulk_copy_one(r, int(i), duplicate=duplicate,
+                                    asynchronous=asynchronous)
+
+    def _bulk_copy_evicting(self, r: Region, ids: np.ndarray,
+                            duplicate: bool) -> bool:
+        """Async bulk copy under memory pressure (oversubscribed prefetch and
+        the coherent-fabric eager-restore ping-pong).  Victim consumption per
+        copied chunk and the copy-stream clock follow in closed form from the
+        static victim layout (_plan_victims); returns False when that layout
+        cannot be proven equivalent to the seed's interleaved pops."""
+        sizes = r.sizes[ids]
+        x = sizes / (self.p.link_bw_gbs * GB)
+        ins_cum = np.cumsum(sizes)
+        need = ins_cum - (self.device_capacity - self.device_used)
+        own_dup = np.full(len(ids), bool(duplicate))
+        plan = self._plan_victims(r, ids, need, own_dup)
+        if plan is None:
+            return False
+        # copy-stream clock: the device clock advances by each migrated
+        # victim's write-back before the copy that consumed it, so
+        # t_copy_i = max(t_copy_{i-1}, d_i) + x_i with d_i closed-form below;
+        # the recurrence solves as a running max shifted by the transfer
+        # cumsum
+        v_dtoh = np.where(plan["v_dup"], 0.0,
+                          plan["v_sizes"] / (self.p.link_bw_gbs * GB))
+        dtoh_cum = np.concatenate([[0.0], np.cumsum(v_dtoh)])
+        d = self.t_device + dtoh_cum[plan["m"]]
+        X = np.cumsum(x)
+        u = np.maximum(self.t_copy, np.maximum.accumulate(d - (X - x)))
+        arr = u + X
+        self.t_copy = float(arr[-1])
+        self._insert_resident(r, ids, duplicate=duplicate)
+        r.arrival[ids] = arr
+        r.populated[ids] = True
+        self.report.htod_s += float(X[-1])
+        self.report.htod_bytes += int(ins_cum[-1])
+        plan["own_ids"] = ids
+        plan["own_dup"] = own_dup
+        self._commit_evictions(r, plan)
+        return True
 
     # -- public API mirroring the CUDA calls -------------------------------------
+    def _copy_walk(self, r: Region, candidates, *, duplicate: bool,
+                   asynchronous: bool) -> None:
+        """Walk chunk indices in order, bulk-copying each maximal candidate
+        run.  Candidates are re-evaluated per run because a copy's evictions
+        can change later chunks' state (the seed re-checks lazily per chunk)."""
+        pos = 0
+        while pos < r.nchunks:
+            m = candidates(r)[pos:]
+            nz = np.nonzero(m)[0]
+            if not len(nz):
+                return
+            start = pos + int(nz[0])
+            brk = np.nonzero(np.diff(nz) != 1)[0]
+            ln = int(brk[0]) + 1 if len(brk) else len(nz)
+            self._bulk_copy_batch(r, np.arange(start, start + ln),
+                                  duplicate=duplicate, asynchronous=asynchronous)
+            pos = start + ln
+
     def explicit_copy_to_device(self, name: str) -> None:
         """cudaMemcpy HtoD — the 'original' variant. No oversubscription."""
         r = self.regions[name]
-        total = self.device_used + sum(
-            r.chunk_size(i) for i in range(r.nchunks) if not r.device_resident(i)
-        )
+        total = self.device_used + int(r.sizes[~r.resident_mask()].sum())
         if total > self.device_capacity:
             raise OversubscriptionError(
                 f"explicit allocation of {r.name} exceeds device memory"
             )
-        for i in range(r.nchunks):
-            if not r.device_resident(i):
-                self._bulk_copy_chunk(r, i, duplicate=False, asynchronous=False)
+        self._copy_walk(r, lambda rr: ~rr.resident_mask(),
+                        duplicate=False, asynchronous=False)
 
     def explicit_alloc(self, name: str) -> None:
         """cudaMalloc semantics: device allocation, no transfer.  Fails when
         out of memory — explicit variants cannot oversubscribe (paper §IV-B)."""
         r = self.regions[name]
-        need = sum(
-            r.chunk_size(i) for i in range(r.nchunks) if not r.device_resident(i)
-        )
+        cand = np.nonzero(~r.resident_mask())[0]
+        need = int(r.sizes[cand].sum())
         if self.device_used + need > self.device_capacity:
             raise OversubscriptionError(
                 f"explicit allocation of {r.name} exceeds device memory"
             )
-        for i in range(r.nchunks):
-            if not r.device_resident(i):
-                self._mark_resident(r, i, duplicate=False)
+        if len(cand):
+            self._insert_resident(r, cand, duplicate=False)
 
     def explicit_copy_to_host(self, name: str) -> None:
         r = self.regions[name]
-        for i in range(r.nchunks):
-            if r.loc[i] is MemorySpace.DEVICE:
-                t = r.chunk_size(i) / (self.p.link_bw_gbs * GB)
-                self.t_device += t
-                self.report.dtoh_s += t
-                self.report.dtoh_bytes += r.chunk_size(i)
+        ids = np.nonzero(r.on_device)[0]
+        if len(ids):
+            sz = r.sizes[ids]
+            t = float((sz / (self.p.link_bw_gbs * GB)).sum())
+            self.t_device += t
+            self.report.dtoh_s += t
+            self.report.dtoh_bytes += int(sz.sum())
 
     def prefetch(self, name: str, dst: MemorySpace = MemorySpace.DEVICE) -> None:
         """cudaMemPrefetchAsync: bulk, background stream, no faults.
@@ -383,26 +760,21 @@ class UMSimulator:
         """
         r = self.regions[name]
         if dst is MemorySpace.DEVICE:
-            for i in range(r.nchunks):
-                if not r.device_resident(i):
-                    self._bulk_copy_chunk(
-                        r, i, duplicate=r.read_mostly, asynchronous=True
-                    )
+            self._copy_walk(r, lambda rr: ~rr.resident_mask(),
+                            duplicate=r.read_mostly, asynchronous=True)
         else:
             if r.preferred is MemorySpace.DEVICE:
                 r.preferred = None  # un-pin
-            for i in range(r.nchunks):
-                if r.loc[i] is MemorySpace.DEVICE:
-                    size = r.chunk_size(i)
-                    xfer = size / (self.p.link_bw_gbs * GB)
-                    self.t_copy = max(self.t_copy, self.t_device) + xfer
-                    self.report.dtoh_s += xfer
-                    self.report.dtoh_bytes += size
-                    r.loc[i] = MemorySpace.HOST
-                    key = (r.name, i)
-                    if self._resident_remove(key):
-                        self.device_used -= size
-                    r.duplicated[i] = False
+            ids = np.nonzero(r.on_device)[0]
+            if len(ids):
+                sz = r.sizes[ids]
+                t = float((sz / (self.p.link_bw_gbs * GB)).sum())
+                self.t_copy = max(self.t_copy, self.t_device) + t
+                self.report.dtoh_s += t
+                self.report.dtoh_bytes += int(sz.sum())
+                self.device_used -= int(sz.sum())
+                r.on_device[ids] = False
+                r.duplicated[ids] = False
 
     def _eager_restore(self) -> None:
         """Coherent-fabric runtime behaviour under memory pressure: pages
@@ -418,9 +790,8 @@ class UMSimulator:
         for r in self.regions.values():
             if r.preferred is not MemorySpace.DEVICE:
                 continue
-            for i in range(r.nchunks):
-                if not r.device_resident(i) and r.populated[i]:
-                    self._bulk_copy_chunk(r, i, duplicate=False, asynchronous=True)
+            self._copy_walk(r, lambda rr: ~rr.resident_mask() & rr.populated,
+                            duplicate=False, asynchronous=True)
 
     def host_write(self, name: str, nbytes: int | None = None) -> None:
         """Host writes the region (e.g. initialization).
@@ -437,41 +808,40 @@ class UMSimulator:
         r = self.regions[name]
         nbytes = r.nbytes if nbytes is None else nbytes
         nch = max(1, math.ceil(nbytes / r.chunk_bytes))
-        for i in range(min(nch, r.nchunks)):
-            if r.duplicated[i]:
-                r.duplicated[i] = False  # write invalidates the duplicate
-                key = (r.name, i)
-                if r.loc[i] is not MemorySpace.DEVICE and self._resident_remove(key):
-                    self.device_used -= r.chunk_size(i)
-            if r.loc[i] is MemorySpace.DEVICE:
-                wants_remote = (
-                    Accessor.HOST in r.accessed_by
-                    or r.preferred is MemorySpace.DEVICE
-                )
-                if wants_remote and self.p.host_can_access_device:
-                    size = r.chunk_size(i)
-                    t = size / (
-                        self.p.link_bw_gbs * GB * self.p.remote_access_efficiency
-                    )
-                    self.report.remote_s += t
-                    self.report.remote_bytes += size
-                    # remote access happens on the host timeline; it delays
-                    # subsequent kernels only through t_copy ordering
-                    self.t_copy = max(self.t_copy, self.t_device) + t
-                else:
-                    size = r.chunk_size(i)
-                    stall = self.p.fault_latency_us * 1e-6
-                    xfer = size / (self.p.link_bw_gbs * GB)
-                    self.report.fault_stall_s += stall
-                    self.report.dtoh_s += xfer
-                    self.report.dtoh_bytes += size
-                    self.report.n_faults += 1
-                    self.t_copy = max(self.t_copy, self.t_device) + stall + xfer
-                    key = (r.name, i)
-                    if self._resident_remove(key):
-                        self.device_used -= size
-                    r.loc[i] = MemorySpace.HOST
-            r.populated[i] = True
+        ids = np.arange(min(nch, r.nchunks))
+        dup_ids = ids[r.duplicated[ids]]
+        if len(dup_ids):
+            r.duplicated[dup_ids] = False  # write invalidates the duplicate
+            gone = dup_ids[~r.on_device[dup_ids]]
+            self.device_used -= int(r.sizes[gone].sum())
+        dev_ids = ids[r.on_device[ids]]
+        if len(dev_ids):
+            sz = r.sizes[dev_ids]
+            total = int(sz.sum())
+            wants_remote = (
+                Accessor.HOST in r.accessed_by
+                or r.preferred is MemorySpace.DEVICE
+            )
+            if wants_remote and self.p.host_can_access_device:
+                t = float((sz / (self.p.link_bw_gbs * GB
+                                 * self.p.remote_access_efficiency)).sum())
+                self.report.remote_s += t
+                self.report.remote_bytes += total
+                # remote access happens on the host timeline; it delays
+                # subsequent kernels only through t_copy ordering
+                self.t_copy = max(self.t_copy, self.t_device) + t
+            else:
+                events = self._n_fault_events(r, dev_ids)
+                stall = events * self.p.fault_latency_us * 1e-6
+                xfer = float((sz / (self.p.link_bw_gbs * GB)).sum())
+                self.report.fault_stall_s += stall
+                self.report.dtoh_s += xfer
+                self.report.dtoh_bytes += total
+                self.report.n_faults += events
+                self.t_copy = max(self.t_copy, self.t_device) + stall + xfer
+                self.device_used -= total
+                r.on_device[dev_ids] = False
+        r.populated[ids] = True
 
     def host_read(self, name: str, nbytes: int | None = None) -> None:
         """Host reads results. Device-resident pages migrate back unless the
@@ -479,29 +849,29 @@ class UMSimulator:
         r = self.regions[name]
         nbytes = r.nbytes if nbytes is None else nbytes
         nch = max(1, math.ceil(nbytes / r.chunk_bytes))
-        for i in range(min(nch, r.nchunks)):
-            if r.loc[i] is MemorySpace.DEVICE and not r.duplicated[i]:
-                if Accessor.HOST in r.accessed_by and self.p.host_can_access_device:
-                    size = r.chunk_size(i)
-                    t = size / (
-                        self.p.link_bw_gbs * GB * self.p.remote_access_efficiency
-                    )
-                    self.report.remote_s += t
-                    self.report.remote_bytes += size
-                    self.t_copy = max(self.t_copy, self.t_device) + t
-                else:
-                    size = r.chunk_size(i)
-                    stall = self.p.fault_latency_us * 1e-6
-                    xfer = size / (self.p.link_bw_gbs * GB)
-                    self.report.fault_stall_s += stall
-                    self.report.dtoh_s += xfer
-                    self.report.dtoh_bytes += size
-                    self.report.n_faults += 1
-                    self.t_device += stall + xfer
-                    key = (r.name, i)
-                    if self._resident_remove(key):
-                        self.device_used -= size
-                    r.loc[i] = MemorySpace.HOST
+        ids = np.arange(min(nch, r.nchunks))
+        sel = ids[r.on_device[ids] & ~r.duplicated[ids]]
+        if not len(sel):
+            return
+        sz = r.sizes[sel]
+        total = int(sz.sum())
+        if Accessor.HOST in r.accessed_by and self.p.host_can_access_device:
+            t = float((sz / (self.p.link_bw_gbs * GB
+                             * self.p.remote_access_efficiency)).sum())
+            self.report.remote_s += t
+            self.report.remote_bytes += total
+            self.t_copy = max(self.t_copy, self.t_device) + t
+        else:
+            events = self._n_fault_events(r, sel)
+            stall = events * self.p.fault_latency_us * 1e-6
+            xfer = float((sz / (self.p.link_bw_gbs * GB)).sum())
+            self.report.fault_stall_s += stall
+            self.report.dtoh_s += xfer
+            self.report.dtoh_bytes += total
+            self.report.n_faults += events
+            self.t_device += stall + xfer
+            self.device_used -= total
+            r.on_device[sel] = False
 
     def kernel(
         self,
@@ -526,52 +896,60 @@ class UMSimulator:
         write_set = [self.regions[n] for n in writes]
         remote_bytes = 0
 
-        def chunk_ids(r: Region):
+        def chunk_ids(r: Region) -> np.ndarray:
             frac = partial.get(r.name)
             if frac is None:
-                return range(r.nchunks)
+                return np.arange(r.nchunks)
             n = max(1, int(frac * r.nchunks))
-            ids = [(r.cursor + j) % r.nchunks for j in range(n)]
+            ids = (r.cursor + np.arange(n)) % r.nchunks
             r.cursor = (r.cursor + n) % r.nchunks
             return ids
 
-        touched: dict[str, list[int]] = {}
+        touched: dict[str, np.ndarray] = {}
         for r in read_set + write_set:
             if r.name not in touched:
-                touched[r.name] = list(chunk_ids(r))
+                touched[r.name] = chunk_ids(r)
 
+        lat = self.p.fault_latency_us * 1e-6
         for r in write_set:
-            for i in touched[r.name]:
-                if r.duplicated[i]:
-                    # a device write invalidates the host copy: promote the
-                    # duplicate to an exclusive device page (small latency)
-                    r.duplicated[i] = False
-                    r.loc[i] = MemorySpace.DEVICE
-                    self.report.fault_stall_s += self.p.fault_latency_us * 1e-6
-                    self.t_device += self.p.fault_latency_us * 1e-6
+            ids = touched[r.name]
+            d = ids[r.duplicated[ids]]
+            if len(d):
+                # a device write invalidates the host copy: promote the
+                # duplicate to an exclusive device page (small latency)
+                r.duplicated[d] = False
+                r.on_device[d] = True
+                self.report.fault_stall_s += len(d) * lat
+                self.t_device += len(d) * lat
 
         for r in read_set + write_set:
             pinned_host = r.preferred is MemorySpace.HOST
-            for i in touched[r.name]:
-                if r.device_resident(i):
+            dup_flag = r.read_mostly and r in read_set and r not in write_set
+            ids = touched[r.name]
+            pos, n = 0, len(ids)
+            while pos < n:
+                rem = ids[pos:]
+                res = r.on_device[rem] | r.duplicated[rem]
+                brk = np.nonzero(res != res[0])[0]
+                ln = int(brk[0]) if len(brk) else len(rem)
+                seg = rem[:ln]
+                if res[0]:
                     # may still be in flight from an async prefetch
-                    if r.arrival[i] > self.t_device:
-                        wait = r.arrival[i] - self.t_device
-                        self.t_device += wait
-                    self._touch(r, i)
-                    continue
-                if pinned_host and self.p.device_can_access_host:
-                    remote_bytes += r.chunk_size(i)  # mapped, no migration
-                    continue
-                self._fault_migrate(r, i, duplicate=r.read_mostly and r in read_set and r not in write_set)
+                    mx = float(r.arrival[seg].max())
+                    if mx > self.t_device:
+                        self.t_device = mx
+                    self._touch(r, seg)
+                elif pinned_host and self.p.device_can_access_host:
+                    remote_bytes += int(r.sizes[seg].sum())  # mapped, no migration
+                else:
+                    self._fault_batch(r, seg, duplicate=dup_flag)
+                pos += ln
 
         local_bytes = bytes_touched
         if local_bytes is None:
             local_bytes = float(
-                sum(
-                    sum(r.chunk_size(i) for i in touched[r.name])
-                    for r in read_set + write_set
-                )
+                sum(int(r.sizes[touched[r.name]].sum())
+                    for r in read_set + write_set)
             )
         compute = max(
             flops / (self.p.device_flops_tps * 1e12),
@@ -585,8 +963,7 @@ class UMSimulator:
         self.report.remote_s += remote_t
         self.report.remote_bytes += remote_bytes
         for r in write_set:
-            for i in touched[r.name]:
-                r.populated[i] = True
+            r.populated[touched[r.name]] = True
         self._eager_restore()
 
     def finish(self) -> SimReport:

@@ -33,7 +33,7 @@ from repro.configs import ARCH_NAMES, get_config, get_shape
 from repro.configs.base import ArchConfig, MeshConfig, ShapeConfig
 from repro.core.residency import plan_cell
 from repro.launch import analysis
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.launch.step import (
     abstract_caches,
     abstract_opt_state,
@@ -66,12 +66,13 @@ def lower_cell(arch: ArchConfig, shape: ShapeConfig, mesh, plan, *,
                unroll: bool = False):
     """Lower + compile one cell's step on `mesh`. Returns (lowered, compiled).
 
-    jax.set_mesh activates the model's shard_hint constraints (SP residual
-    stream, seq-replicated KV); probes also unroll the flash KV-block scan.
+    mesh_context (jax.set_mesh on new JAX, the Mesh context manager on old)
+    activates the model's shard_hint constraints (SP residual stream,
+    seq-replicated KV); probes also unroll the flash KV-block scan.
     """
     import repro.models.attention as attn_mod
     attn_mod.UNROLL_FLASH = unroll
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         return _lower_cell_inner(arch, shape, mesh, plan, unroll)
 
 

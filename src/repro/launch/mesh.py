@@ -8,20 +8,40 @@ smoke tests and benchmarks see the real single device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
 from repro.configs.base import MeshConfig
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # jax < 0.5: all mesh axes behave as Auto
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for CPU sharding tests (8 fake devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
+
+
+def mesh_context(mesh: jax.sharding.Mesh):
+    """`jax.set_mesh(mesh)` where available (>=0.5); on older JAX the Mesh
+    object itself is the context manager that activates the same
+    thread-resource state consumed by shard_hint/with_sharding_constraint."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def mesh_config_of(mesh: jax.sharding.Mesh) -> MeshConfig:

@@ -108,7 +108,11 @@ def make_shardings(arch: ArchConfig, shape: ShapeConfig, mesh,
 
     opt_sh = None
     if shape.kind == "train":
-        opt_kind = "device"
+        # None = backend-default memory ("device" on TPU/GPU).  Older
+        # XLA:CPU backends advertise no "device" kind at all, so only name a
+        # kind when the plan demands host placement AND the backend can
+        # compile it.
+        opt_kind = None
         if plan is not None and plan.opt_space is MemorySpace.HOST:
             from repro.core.placement import backend_supports_memory_kinds
             if backend_supports_memory_kinds():

@@ -1,17 +1,29 @@
 """umbench harness — the paper's experiment matrix (§III):
 
   {explicit, um, um_advise, um_prefetch, um_both}
-× {in-memory (~80 % device mem), oversubscribed (~150 %)}
-× platforms (Intel-Pascal/Volta PCIe, P9-Volta NVLink, TPU-v5e host model)
-× six applications.
+× {in-memory (~80 % device mem), oversubscribed (~150 %), oversubscribed_2x
+   (200 %, beyond-paper stress regime)}
+× platforms (Intel-Pascal/Volta PCIe, P9-Volta NVLink, Grace-Hopper C2C,
+   TPU-v5e host model)
+× six applications
+× chunk granularity ("group" = 2 MB fault groups, the paper's driver block;
+   "page" = 64 KB system pages, modelling the coherent-fabric fault
+   explosion of Fig. 7c/8c directly).
 
 Figure of merit: simulated GPU-kernel-time-plus-stalls (the paper's metric)
 with the paper's Fig. 4/7 breakdown (compute / fault stall / HtoD / DtoH).
+
+``run_matrix(workers=N)`` fans cells out over a ``concurrent.futures``
+process pool — cells are independent simulations, so the sweep scales with
+cores; the default stays serial (the vectorized engine already runs the
+seed 240-cell matrix in a few seconds).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import os
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, Sequence
 
 from repro.core.simulator import (
     GB,
@@ -24,7 +36,11 @@ from repro.umbench import platforms as plat
 from repro.umbench.apps import bfs, black_scholes, cg, conv_fft, fdtd3d, matmul
 
 VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
-REGIMES = {"in_memory": 0.80, "oversubscribed": 1.50}
+REGIMES = {
+    "in_memory": 0.80,
+    "oversubscribed": 1.50,
+    "oversubscribed_2x": 2.00,   # beyond-paper: 200 % oversubscription
+}
 
 APPS: dict[str, Callable] = {
     "bs": black_scholes.simulate,
@@ -38,6 +54,10 @@ APPS: dict[str, Callable] = {
 }
 
 DEFAULT_PLATFORMS = ("intel-pascal-pcie", "intel-volta-pcie", "p9-volta-nvlink")
+# the seed matrix above, plus the coherent superchip and the stress regime
+EXTENDED_PLATFORMS = DEFAULT_PLATFORMS + ("grace-hopper-c2c",)
+DEFAULT_REGIMES = ("in_memory", "oversubscribed")
+EXTENDED_REGIMES = ("in_memory", "oversubscribed", "oversubscribed_2x")
 
 
 @dataclasses.dataclass
@@ -47,6 +67,7 @@ class CellResult:
     variant: str
     regime: str
     report: SimReport | None      # None => N/A (explicit cannot oversubscribe)
+    granularity: str = "group"
 
     @property
     def total_s(self) -> float | None:
@@ -59,6 +80,7 @@ class CellResult:
             "platform": self.platform,
             "variant": self.variant,
             "regime": self.regime,
+            "granularity": self.granularity,
             "total_s": None if r is None else round(r.total_s, 4),
             **({} if r is None else {
                 "compute_s": round(r.compute_s, 4),
@@ -73,29 +95,61 @@ class CellResult:
         }
 
 
-def run_cell(app: str, platform: SimPlatform, variant: str, regime: str) -> CellResult:
+def run_cell(app: str, platform: SimPlatform, variant: str, regime: str,
+             granularity: str = "group") -> CellResult:
     total = REGIMES[regime] * platform.device_mem_gb * GB
-    sim = UMSimulator(platform)
+    sim = UMSimulator(platform, granularity=granularity)
     try:
         APPS[app](sim, total, variant)
         report = sim.finish()
     except OversubscriptionError:
         report = None  # the paper: 'the case does not exist with explicit'
-    return CellResult(app, platform.name, variant, regime, report)
+    return CellResult(app, platform.name, variant, regime, report, granularity)
+
+
+def _run_cell_spec(spec: tuple[str, str, str, str, str]) -> CellResult:
+    """Top-level (picklable) cell runner for the process pool."""
+    app, pname, variant, regime, granularity = spec
+    return run_cell(app, plat.PLATFORMS[pname], variant, regime, granularity)
+
+
+def matrix_specs(apps=None, platform_names=DEFAULT_PLATFORMS,
+                 regimes=DEFAULT_REGIMES, variants=VARIANTS,
+                 granularity: str = "group") -> list[tuple]:
+    apps = apps or list(APPS)
+    return [
+        (app, pname, variant, regime, granularity)
+        for regime in regimes
+        for pname in platform_names
+        for app in apps
+        for variant in variants
+    ]
 
 
 def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
-               regimes=("in_memory", "oversubscribed"),
-               variants=VARIANTS) -> list[CellResult]:
-    apps = apps or list(APPS)
-    out = []
-    for regime in regimes:
-        for pname in platform_names:
-            platform = plat.PLATFORMS[pname]
-            for app in apps:
-                for variant in variants:
-                    out.append(run_cell(app, platform, variant, regime))
-    return out
+               regimes=DEFAULT_REGIMES, variants=VARIANTS,
+               granularity: str = "group",
+               workers: int | None = None) -> list[CellResult]:
+    """Run the experiment matrix; ``workers`` > 1 fans the independent cells
+    out over a process pool (cells are returned in matrix order either way)."""
+    specs = matrix_specs(apps, platform_names, regimes, variants, granularity)
+    if workers is not None and workers > 1:
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            return list(pool.map(_run_cell_spec, specs,
+                                 chunksize=max(1, len(specs) // (workers * 4))))
+    return [_run_cell_spec(s) for s in specs]
+
+
+def run_extended_matrix(workers: int | None = None,
+                        granularity: str = "group") -> list[CellResult]:
+    """The seed matrix plus the Grace-Hopper platform and the 200 % regime."""
+    return run_matrix(platform_names=EXTENDED_PLATFORMS,
+                      regimes=EXTENDED_REGIMES,
+                      granularity=granularity, workers=workers)
+
+
+def default_workers() -> int:
+    return max(1, os.cpu_count() or 1)
 
 
 def speedup_vs_um(results: list[CellResult]) -> dict[tuple, float]:

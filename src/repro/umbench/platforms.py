@@ -1,5 +1,6 @@
 """Platform models for the UM simulator — the paper's three test systems
-(§III-B) plus the TPU v5e host-attach point this framework targets.
+(§III-B) plus the TPU v5e host-attach point this framework targets and a
+Grace-Hopper-class coherent superchip (beyond-paper extrapolation).
 
 Calibration sources: PCIe Gen3 x16 effective ~12 GB/s; NVLink2 CPU<->GPU
 effective ~60 GB/s (paper cites Pearson et al. ICPE'19 microbenchmarks);
@@ -7,6 +8,10 @@ fault-group handling latencies from Sakharnykh GTC'17 (tens of us per group,
 lower on P9 due to ATS).  Device numbers: GTX 1050 Ti (4 GB, 112 GB/s,
 ~2.1 TFLOP/s fp32); V100 (16 GB, 900 GB/s, ~14 TFLOP/s fp32);
 TPU v5e (16 GB, 819 GB/s, 197 TFLOP/s bf16, PCIe Gen4-class host link).
+GH200: H100 96 GB HBM3 (~3.4 TB/s, ~67 TFLOP/s fp32) with the NVLink-C2C
+hardware-coherent link (~450 GB/s effective per direction); 'Harnessing
+Integrated CPU-GPU System Memory for HPC: a first look into Grace Hopper'
+reports near-bulk fault-driven migration and low ATS handling latency.
 """
 from __future__ import annotations
 
@@ -48,6 +53,19 @@ P9_VOLTA = SimPlatform(
     fault_migration_efficiency=0.85,  # coherent fabric: near-bulk fault paths
 )
 
+GRACE_HOPPER = SimPlatform(
+    name="grace-hopper-c2c",
+    device_mem_gb=96.0,
+    link_bw_gbs=450.0,
+    device_bw_gbs=3400.0,
+    device_flops_tps=67.0,
+    fault_latency_us=8.0,            # hardware ATS walk, no host IRQ round-trip
+    host_can_access_device=True,     # C2C: fully coherent in both directions
+    device_can_access_host=True,
+    fault_migration_efficiency=0.9,  # near-bulk fault paths (GH paper §4)
+    remote_access_efficiency=0.8,
+)
+
 TPU_V5E = SimPlatform(
     name="tpu-v5e-host",
     device_mem_gb=16.0,
@@ -60,5 +78,6 @@ TPU_V5E = SimPlatform(
 )
 
 PLATFORMS = {
-    p.name: p for p in (INTEL_PASCAL, INTEL_VOLTA, P9_VOLTA, TPU_V5E)
+    p.name: p
+    for p in (INTEL_PASCAL, INTEL_VOLTA, P9_VOLTA, GRACE_HOPPER, TPU_V5E)
 }

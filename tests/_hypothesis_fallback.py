@@ -1,0 +1,43 @@
+"""Fallback shims so test modules collect when `hypothesis` is absent.
+
+Property tests decorated with this module's ``given`` are collected as
+skip-marked placeholders instead of hard-failing at import (the runtime
+image does not ship hypothesis; it stays a dev-only extra in pyproject).
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+import pytest
+
+
+class _AnyStrategy:
+    """Accepts any strategy constructor call; the result is never drawn."""
+
+    def __getattr__(self, name):
+        def strategy(*args, **kwargs):
+            return None
+        return strategy
+
+
+st = _AnyStrategy()
+
+
+def settings(*args, **kwargs):
+    def decorate(fn):
+        return fn
+    return decorate
+
+
+def given(*args, **kwargs):
+    def decorate(fn):
+        @pytest.mark.skip(reason="hypothesis not installed")
+        def placeholder():
+            pass
+        placeholder.__name__ = fn.__name__
+        placeholder.__doc__ = fn.__doc__
+        return placeholder
+    return decorate

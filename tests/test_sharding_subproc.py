@@ -15,7 +15,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, mesh_context
 from repro.launch.step import (input_specs, abstract_params, abstract_opt_state,
                                make_shardings, build_train_step, build_serve_step,
                                abstract_caches)
@@ -27,7 +27,7 @@ for name in ("qwen2-7b", "rwkv6-3b", "mixtral-8x22b"):
     arch = get_config(name)
     arch = dataclasses.replace(arch, model=arch.model.reduce())
     shape = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         psh, osh, bsh, _ = make_shardings(arch, shape, mesh)
         step = build_train_step(arch, shape, mesh)
         comp = jax.jit(step,
@@ -45,7 +45,7 @@ for name in ("qwen2-7b", "rwkv6-3b", "mixtral-8x22b"):
     }
     # decode too
     shape_d = ShapeConfig("d", seq_len=64, global_batch=4, kind="decode")
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         psh, _, bsh, csh = make_shardings(arch, shape_d, mesh)
         sstep = build_serve_step(arch)
         comp = jax.jit(sstep,

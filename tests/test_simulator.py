@@ -1,7 +1,11 @@
 """UM simulator unit + property tests: advise semantics (paper §II) and
 conservation/capacity invariants (hypothesis)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection must not error (dev-only dependency)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.advise import Accessor, MemorySpace
 from repro.core.simulator import (

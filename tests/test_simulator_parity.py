@@ -1,0 +1,92 @@
+"""Golden parity: the vectorized UM engine must reproduce the seed model.
+
+Every cell in the sample runs through both ``repro.core.simulator`` (NumPy
+array state, batched accounting) and ``repro.core.seed_simulator`` (the
+original per-chunk OrderedDict model) and must produce identical SimReport
+counters (faults, evictions, drops, bytes — exact) and times (<=1e-9
+relative; the engines sum the same per-chunk float contributions in
+different associations).
+
+The sample is chosen to cross every variant, every regime (including the
+beyond-paper 200 %), every platform (including grace-hopper-c2c), and the
+paths that exercise distinct engine machinery: eager-restore ping-pong,
+self-evicting pinned prefetch, streaming own-batch thrash, remote
+initialization, and the explicit N/A case.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import seed_simulator
+from repro.core import simulator as vec
+from repro.core.simulator import GB, OversubscriptionError
+from repro.umbench import platforms as plat
+from repro.umbench.harness import APPS, REGIMES
+
+# (app, platform, variant, regime) — grace-hopper stays in_memory because the
+# seed oracle is O(nchunks) per op and 96 GB oversubscribed takes minutes.
+SAMPLE = [
+    ("bs", "intel-pascal-pcie", "explicit", "in_memory"),
+    ("bs", "intel-pascal-pcie", "um", "oversubscribed"),
+    ("bs", "intel-pascal-pcie", "um_advise", "oversubscribed"),
+    ("bs", "intel-pascal-pcie", "um_prefetch", "oversubscribed"),
+    ("bs", "intel-pascal-pcie", "um_both", "oversubscribed"),
+    ("bs", "intel-pascal-pcie", "explicit", "oversubscribed"),   # N/A parity
+    ("bs", "intel-pascal-pcie", "um", "oversubscribed_2x"),
+    ("cg", "intel-pascal-pcie", "um_advise", "oversubscribed_2x"),
+    ("bs", "intel-volta-pcie", "um_prefetch", "in_memory"),
+    ("cg", "intel-volta-pcie", "um_both", "oversubscribed"),     # own-thrash
+    ("cg", "p9-volta-nvlink", "um_advise", "oversubscribed"),    # ping-pong
+    ("cg", "p9-volta-nvlink", "um_advise", "in_memory"),         # remote init
+    ("fdtd3d", "p9-volta-nvlink", "um_advise", "in_memory"),
+    ("fdtd3d", "p9-volta-nvlink", "um_both", "oversubscribed"),
+    ("graph500", "intel-pascal-pcie", "um_both", "oversubscribed"),  # pinned
+    ("graph500", "intel-pascal-pcie", "um_prefetch", "oversubscribed"),
+    ("conv0", "intel-volta-pcie", "um_both", "in_memory"),
+    ("conv1", "intel-pascal-pcie", "um_advise", "oversubscribed"),
+    ("cublas", "intel-pascal-pcie", "explicit", "in_memory"),
+    ("cublas", "p9-volta-nvlink", "um", "oversubscribed"),
+    ("bs", "grace-hopper-c2c", "um", "in_memory"),
+    ("bs", "grace-hopper-c2c", "um_advise", "in_memory"),
+]
+
+COUNTERS = ("htod_bytes", "dtoh_bytes", "remote_bytes",
+            "n_faults", "n_evictions", "n_dropped")
+TIMES = ("compute_s", "fault_stall_s", "htod_s", "dtoh_s", "remote_s",
+         "total_s")
+
+
+def _run(engine, app, platform, variant, regime):
+    sim = engine.UMSimulator(platform)
+    try:
+        APPS[app](sim, REGIMES[regime] * platform.device_mem_gb * GB, variant)
+        return sim.finish()
+    except OversubscriptionError:
+        return None
+
+
+@pytest.mark.parametrize("app,pname,variant,regime", SAMPLE)
+def test_vectorized_matches_seed(app, pname, variant, regime):
+    platform = plat.PLATFORMS[pname]
+    got = _run(vec, app, platform, variant, regime)
+    want = _run(seed_simulator, app, platform, variant, regime)
+    assert (got is None) == (want is None)
+    if want is None:
+        return
+    g, w = dataclasses.asdict(got), dataclasses.asdict(want)
+    for k in COUNTERS:
+        assert int(g[k]) == int(w[k]), (k, g[k], w[k])
+    for k in TIMES:
+        assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), (k, g[k], w[k])
+
+
+def test_seed_variants_cover_all_paths():
+    """The sample crosses every variant, every regime, and every simulated
+    GPU platform — the ISSUE's 'fixed cell sample' contract."""
+    variants = {v for _, _, v, _ in SAMPLE}
+    regimes = {r for _, _, _, r in SAMPLE}
+    platforms = {p for _, p, _, _ in SAMPLE}
+    assert variants == {"explicit", "um", "um_advise", "um_prefetch", "um_both"}
+    assert regimes == {"in_memory", "oversubscribed", "oversubscribed_2x"}
+    assert platforms == {"intel-pascal-pcie", "intel-volta-pcie",
+                         "p9-volta-nvlink", "grace-hopper-c2c"}

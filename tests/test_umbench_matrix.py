@@ -1,0 +1,86 @@
+"""Sweep-engine features beyond the seed matrix: the grace-hopper-c2c
+platform, the 200 % oversubscription regime, the 64 KB page-granularity
+mode, and process-pool parallel run_matrix — each with a paper-grounded
+assertion (coherent-fabric oversubscribed advise loses, per Fig. 7c/8c).
+"""
+import pytest
+
+from repro.umbench import platforms as plat
+from repro.umbench.harness import (
+    EXTENDED_PLATFORMS,
+    EXTENDED_REGIMES,
+    REGIMES,
+    run_cell,
+    run_matrix,
+    speedup_vs_um,
+)
+
+
+def test_extended_matrix_definitions():
+    assert "grace-hopper-c2c" in EXTENDED_PLATFORMS
+    assert "grace-hopper-c2c" in plat.PLATFORMS
+    assert "oversubscribed_2x" in EXTENDED_REGIMES
+    assert REGIMES["oversubscribed_2x"] == 2.0
+
+
+def test_grace_hopper_from_run_matrix():
+    """The coherent superchip reproduces the paper's P9 asymmetry: advise
+    wins in-memory (remote init through the fabric), loses oversubscribed
+    (pinned-page ping-pong + per-page re-duplication faults)."""
+    res = run_matrix(apps=["cg"], platform_names=("grace-hopper-c2c",),
+                     regimes=("in_memory", "oversubscribed"),
+                     variants=("um", "um_advise"))
+    sp = speedup_vs_um(res)
+    assert sp[("cg", "grace-hopper-c2c", "in_memory", "um_advise")] > 1.3
+    assert sp[("cg", "grace-hopper-c2c", "oversubscribed", "um_advise")] < 0.5
+
+
+def test_200pct_regime_from_run_matrix():
+    """200 % oversubscription is runnable end-to-end and strictly harsher
+    than 150 %: more evictions, more time; explicit stays N/A."""
+    res = run_matrix(apps=["bs"], platform_names=("intel-pascal-pcie",),
+                     regimes=("oversubscribed", "oversubscribed_2x"),
+                     variants=("um", "explicit"))
+    by = {(r.variant, r.regime): r for r in res}
+    assert by[("explicit", "oversubscribed_2x")].report is None
+    r15 = by[("um", "oversubscribed")].report
+    r20 = by[("um", "oversubscribed_2x")].report
+    assert r20.n_evictions > r15.n_evictions
+    assert r20.total_s > r15.total_s
+
+
+def test_page_granularity_from_run_matrix():
+    """64 KB page mode models the coherent-fabric fault explosion directly:
+    oversubscribed advise still loses on P9 (Fig. 7c/8c), with the fault
+    count matching the group-mode 64 KB shortcut to within group-boundary
+    effects."""
+    res = run_matrix(apps=["bs"], platform_names=("p9-volta-nvlink",),
+                     regimes=("oversubscribed",),
+                     variants=("um", "um_advise"), granularity="page")
+    assert all(r.granularity == "page" for r in res)
+    sp = speedup_vs_um(res)
+    assert sp[("bs", "p9-volta-nvlink", "oversubscribed", "um_advise")] < 0.5
+    page = next(r for r in res if r.variant == "um_advise").report
+    group = run_cell("bs", plat.P9_VOLTA, "um_advise", "oversubscribed").report
+    assert page.n_faults == pytest.approx(group.n_faults, rel=0.01)
+
+
+def test_page_granularity_in_memory_fault_counts_comparable():
+    """Outside the pressure path, page-mode faults coalesce per 2 MB group
+    span, so in-memory fault counts match group granularity."""
+    g = run_cell("bs", plat.INTEL_PASCAL, "um", "in_memory").report
+    p = run_cell("bs", plat.INTEL_PASCAL, "um", "in_memory",
+                 granularity="page").report
+    assert p.n_faults == pytest.approx(g.n_faults, rel=0.01)
+    assert p.htod_bytes == g.htod_bytes
+
+
+def test_parallel_run_matrix_matches_serial():
+    specs = dict(apps=["bs", "cg"],
+                 platform_names=("intel-pascal-pcie",),
+                 regimes=("in_memory", "oversubscribed"))
+    serial = run_matrix(**specs)
+    par = run_matrix(**specs, workers=2)
+    assert len(serial) == len(par)
+    for a, b in zip(serial, par):
+        assert a.row() == b.row()
