@@ -17,6 +17,7 @@ from __future__ import annotations
 from repro.core.simulator import GB
 from repro.umbench.harness import (
     EXTENDED_PLATFORMS,
+    EXTENDED_VARIANTS,
     REGIMES,
     CellResult,
     default_workers,
@@ -33,16 +34,19 @@ _MATRIX: list[CellResult] | None = None
 _EXTENDED: list[CellResult] | None = None
 
 
-def matrix_cells(extended: bool = False) -> list[CellResult]:
-    """The (memoized) matrix sweep; ``extended`` adds grace-hopper-c2c and
-    the 200 % regime on top of the seed 240 cells."""
+def matrix_cells(extended: bool = False,
+                 workers: int | None = None) -> list[CellResult]:
+    """The (memoized) matrix sweep; ``extended`` adds grace-hopper-c2c, the
+    200 % regime, and the svm_remote variant on top of the seed 240 cells,
+    fanned over ``workers`` processes (default: one per core)."""
     global _MATRIX, _EXTENDED
     if extended:
         if _EXTENDED is None:
             _EXTENDED = run_matrix(
                 platform_names=EXTENDED_PLATFORMS,
                 regimes=("in_memory", "oversubscribed", "oversubscribed_2x"),
-                workers=default_workers(),
+                variants=EXTENDED_VARIANTS,
+                workers=workers or default_workers(),
             )
         return _EXTENDED
     if _MATRIX is None:
@@ -123,13 +127,17 @@ def table_claims_summary() -> list[str]:
 
 
 def table_extended_sweep() -> list[str]:
-    """Beyond-paper cells: grace-hopper-c2c across regimes and the 200 %
-    stress regime on every platform (speedup vs basic UM per cell)."""
+    """Beyond-paper cells: grace-hopper-c2c across regimes, the 200 % stress
+    regime on every platform, and the svm_remote always-coherent tier
+    everywhere it exists (speedup vs basic UM per cell; N/A on platforms
+    without coherent remote access)."""
     cells = matrix_cells(extended=True)
     sp = speedup_vs_um(cells)
     rows = ["table,app,platform,regime,variant,total_s,speedup_vs_um"]
     for c in cells:
-        if c.platform != "grace-hopper-c2c" and c.regime != "oversubscribed_2x":
+        if (c.platform != "grace-hopper-c2c"
+                and c.regime != "oversubscribed_2x"
+                and c.variant != "svm_remote"):
             continue
         t = "NA" if c.total_s is None else f"{c.total_s:.4f}"
         s = sp.get((c.app, c.platform, c.regime, c.variant))

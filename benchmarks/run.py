@@ -13,12 +13,15 @@ Emits, as CSV blocks:
   dryrun        §Dry-run compile/memory summary, both meshes
 
 ``--json`` additionally writes BENCH_umbench.json: wall-clock seconds per
-block, the simulated totals of every matrix cell, and the seed-baseline
-speedup — the perf-trajectory artifact future PRs regress against.
+block, the simulated totals of every matrix cell, the seed-baseline
+speedup, and — when a previous BENCH_umbench.json exists — per-cell deltas
+against it (the ROADMAP's perf-trajectory item: every PR's artifact is
+diffed cell-by-cell against its predecessor's).
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 
@@ -27,6 +30,47 @@ import time
 # acceptance gate is >=10x against this; future PRs track matrix_240_wall_s
 # in BENCH_umbench.json instead of re-running the seed oracle.
 SEED_BASELINE_MATRIX_240_S = 58.8
+
+BENCH_PATH = "BENCH_umbench.json"
+
+
+def _cell_key(row: dict) -> tuple:
+    return (row["app"], row["platform"], row["variant"], row["regime"],
+            row.get("granularity", "group"))
+
+
+def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
+    """Per-cell simulated-total deltas vs the previous artifact.  Cells are
+    matched on (app, platform, variant, regime, granularity); only changed
+    cells are listed (sorted by |delta|, worst first) so an unchanged sweep
+    produces an empty list, not 240 zeros."""
+    prev = {_cell_key(r): r.get("total_s") for r in prev_cells}
+    cur_keys = {_cell_key(r) for r in cells}
+    changed = []
+    compared = 0
+    for row in cells:
+        key = _cell_key(row)
+        if key not in prev:
+            continue
+        compared += 1
+        old, new = prev[key], row.get("total_s")
+        if old == new:
+            continue
+        delta = {"cell": list(key), "prev_total_s": old, "total_s": new}
+        if old and new is not None:
+            delta["delta_pct"] = round(100.0 * (new - old) / old, 3)
+        changed.append(delta)
+    changed.sort(key=lambda d: abs(d.get("delta_pct", float("inf"))),
+                 reverse=True)
+    return {
+        "cells_compared": compared,
+        "cells_changed": len(changed),
+        "cells_new": len(cells) - compared,
+        # cells the predecessor had but this sweep lost — a non-zero count
+        # means matrix coverage shrank, not that performance held
+        "cells_removed": len(set(prev) - cur_keys),
+        "changed": changed,
+    }
 
 
 def main() -> None:
@@ -65,21 +109,44 @@ def main() -> None:
         print()
 
     if emit_json:
+        prev = None
+        if os.path.exists(BENCH_PATH):
+            try:
+                with open(BENCH_PATH) as f:
+                    prev = json.load(f)
+            except (OSError, ValueError):
+                prev = None
+        from repro.umbench.harness import default_workers
+
+        # the extended sweep (already memoized by the ext block above) fans
+        # out over default_workers() processes; the seed 240-cell matrix
+        # stays serial (it IS the wall-clock gate)
+        sweep_workers = default_workers() if not fast else 1
         cells = paper_tables.matrix_cells(extended=not fast)
+        rows = [c.row() for c in cells]
         payload = {
             "matrix_240_wall_s": round(matrix_wall, 3),
             "seed_baseline_240_wall_s": SEED_BASELINE_MATRIX_240_S,
             "speedup_vs_seed": round(SEED_BASELINE_MATRIX_240_S
                                      / max(matrix_wall, 1e-9), 1),
+            "sweep_workers": sweep_workers,
             "block_wall_s": timings,
             "n_cells": len(cells),
-            "cells": [c.row() for c in cells],
+            "cells": rows,
         }
-        with open("BENCH_umbench.json", "w") as f:
+        if prev is not None:
+            payload["vs_prev"] = {
+                "prev_matrix_240_wall_s": prev.get("matrix_240_wall_s"),
+                **cell_deltas(prev.get("cells", []), rows),
+            }
+        with open(BENCH_PATH, "w") as f:
             json.dump(payload, f, indent=1)
-        print(f"wrote BENCH_umbench.json ({len(cells)} cells, "
+        vs = payload.get("vs_prev")
+        trail = (f", {vs['cells_changed']}/{vs['cells_compared']} cells "
+                 f"changed vs prev" if vs else "")
+        print(f"wrote {BENCH_PATH} ({len(cells)} cells, "
               f"matrix {matrix_wall:.2f}s, "
-              f"{payload['speedup_vs_seed']}x vs seed)")
+              f"{payload['speedup_vs_seed']}x vs seed{trail})")
 
 
 if __name__ == '__main__':

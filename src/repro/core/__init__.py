@@ -18,8 +18,6 @@ from repro.core.advise import (
     set_preferred_location,
     set_read_mostly,
 )
-from repro.core.placement import Placement, backend_supports_memory_kinds
-from repro.core.prefetch import PrefetchIterator, prefetch_to_device
 from repro.core.residency import (
     HBM_PER_DEVICE_BYTES,
     MemoryBudget,
@@ -37,6 +35,24 @@ from repro.core.simulator import (
     SimReport,
     UMSimulator,
 )
+
+# placement/prefetch need JAX; the UM sweep engine (umbench) must import and
+# run without it, so those names resolve lazily on first attribute access.
+_LAZY = {
+    "Placement": "repro.core.placement",
+    "backend_supports_memory_kinds": "repro.core.placement",
+    "PrefetchIterator": "repro.core.prefetch",
+    "prefetch_to_device": "repro.core.prefetch",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "Accessor", "Advise", "AdviseDirective", "AdvisePolicy", "MemorySpace",

@@ -66,7 +66,7 @@ from typing import Mapping
 
 import numpy as np
 
-from repro.core.advise import Accessor, AdvisePolicy, MemorySpace
+from repro.core.advise import Accessor, MemorySpace
 from repro.core.residency import eviction_cut, victim_order
 
 KB = 1024
@@ -178,12 +178,17 @@ GRANULARITIES = ("group", "page")
 
 
 class UMSimulator:
-    def __init__(self, platform: SimPlatform, policy: AdvisePolicy | None = None,
-                 granularity: str = "group"):
+    """Public surface (DESIGN.md §8): ``alloc``, the three ``advise_*`` calls,
+    ``explicit_*`` staging, ``prefetch``, ``host_write``/``host_read``,
+    ``kernel``, ``finish``.  Advise *policy* lives above the simulator — the
+    variant strategies in ``umbench.variants`` decide which advises to issue
+    (role-based ``AdvisePolicy`` included); the simulator only executes them.
+    """
+
+    def __init__(self, platform: SimPlatform, granularity: str = "group"):
         if granularity not in GRANULARITIES:
             raise ValueError(f"granularity must be one of {GRANULARITIES}")
         self.p = platform
-        self.policy = policy or AdvisePolicy()
         self.granularity = granularity
         self.chunk_bytes = (platform.page_bytes if granularity == "page"
                             else platform.fault_group_bytes)
@@ -208,17 +213,7 @@ class UMSimulator:
             raise ValueError(f"region {name} exists")
         r = Region(name, int(nbytes), role=role, chunk_bytes=self.chunk_bytes)
         self.regions[name] = r
-        self._apply_policy(r)
         return r
-
-    def _apply_policy(self, r: Region) -> None:
-        for key in (r.name, r.role):
-            if self.policy.is_read_mostly(key):
-                r.read_mostly = True
-            loc = self.policy.preferred_location(key)
-            if loc is not None:
-                r.preferred = loc
-            r.accessed_by = r.accessed_by + self.policy.accessed_by(key)
 
     def advise_read_mostly(self, name: str) -> None:
         self.regions[name].read_mostly = True

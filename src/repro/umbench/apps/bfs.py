@@ -5,57 +5,45 @@ edge list (modeled with the simulator's ``partial`` access + rotating
 cursor).  Advise: PREFERRED_LOCATION(DEVICE) on the adjacency (the paper
 keeps data used by the GPU close to GPU memory); READ_MOSTLY on row
 pointers.  Figure of merit: mean BFS iteration (paper §III-B).
+Pure trace builder — variant lowering lives in ``umbench.variants``.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.advise import MemorySpace
-from repro.core.simulator import UMSimulator
+from repro.umbench.workload import Workload, WorkloadBuilder
 
 NAME = "graph500"
 LEVELS = 8
 
 
-def simulate(sim: UMSimulator, total_bytes: float, variant: str,
-             iters: int = LEVELS) -> None:
+def workload(total_bytes: float, iters: int = LEVELS) -> Workload:
     col = int(total_bytes * 0.70)
     row = int(total_bytes * 0.10)
     state = int(total_bytes * 0.20) // 3
-    sim.alloc("col_idx", col, role="graph")
-    sim.alloc("row_ptr", row, role="graph")
+    w = WorkloadBuilder(NAME)
+    w.alloc("col_idx", col, role="graph")
+    w.alloc("row_ptr", row, role="graph")
     for nm in ("frontier", "visited", "parent"):
-        sim.alloc(nm, state, role="state")
-    sim.host_write("col_idx")
-    sim.host_write("row_ptr")
-    sim.host_write("frontier", state)
+        w.alloc(nm, state, role="state")
+    w.host_write("col_idx")
+    w.host_write("row_ptr")
+    w.host_write("frontier", state)
 
-    if variant == "explicit":
-        for nm in ("col_idx", "row_ptr", "frontier"):
-            sim.explicit_copy_to_device(nm)
-        sim.explicit_alloc("visited")
-        sim.explicit_alloc("parent")
-    if variant in ("um_advise", "um_both"):
-        sim.advise_preferred_location("col_idx", MemorySpace.DEVICE)
-        sim.advise_read_mostly("row_ptr")
-    if variant in ("um_prefetch", "um_both"):
-        sim.prefetch("col_idx")
-        sim.prefetch("row_ptr")
+    w.advise_preferred_location("col_idx", MemorySpace.DEVICE)
+    w.advise_read_mostly("row_ptr")
+    w.prefetch("col_idx", "row_ptr")
 
     edges = col / 8  # long indices (paper: long data types)
     for _ in range(iters):
-        sim.kernel(
+        w.kernel(
             "bfs_level",
             flops=4.0 * edges / iters,
-            reads=["col_idx", "row_ptr", "frontier", "visited"],
-            writes=["frontier", "visited", "parent"],
+            reads=("col_idx", "row_ptr", "frontier", "visited"),
+            writes=("frontier", "visited", "parent"),
             partial={"col_idx": 1.0 / iters},
         )
-    if variant == "explicit":
-        sim.explicit_copy_to_host("parent")
-    else:
-        sim.host_read("parent")
+    w.readback("parent")
+    return w.build()
 
 
 def bfs_levels(row_ptr, col_idx, src: int, n: int, max_deg: int):
@@ -64,7 +52,8 @@ def bfs_levels(row_ptr, col_idx, src: int, n: int, max_deg: int):
     Padded adjacency gather: row i's neighbours are col_idx[row_ptr[i]:...],
     padded to max_deg with -1.
     """
-    # build padded neighbour matrix once (host-side helper for tests)
+    import jax
+    import jax.numpy as jnp
     import numpy as np
 
     rp = np.asarray(row_ptr)
@@ -113,5 +102,5 @@ def numeric(key, n: int = 64, avg_deg: int = 4):
         idx += sorted(adj[i])
         ptr.append(len(idx))
     max_deg = max(1, max(len(a) for a in adj))
-    level = bfs_levels(jnp.array(ptr), jnp.array(idx), 0, n, max_deg)
+    level = bfs_levels(ptr, idx, 0, n, max_deg)
     return {"level": level, "edges": sorted(edges), "n": n}

@@ -3,15 +3,13 @@
 Good data reuse: the same input set is priced over multiple iterations.
 Advise policy (paper §IV-A): READ_MOSTLY on the three input arrays after
 initialization; nothing else.  Prefetch: the input arrays.
+
+``workload()`` builds the declarative trace; variant lowering lives in
+``umbench.variants`` (the app has zero variant logic).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.simulator import UMSimulator
-from repro.kernels import black_scholes as bs_kernel
-from repro.kernels.black_scholes.ref import black_scholes_ref
+from repro.umbench.workload import Workload, WorkloadBuilder
 
 NAME = "bs"
 ITERS = 8
@@ -22,40 +20,32 @@ INPUTS = ("S", "X", "T")
 OUTPUTS = ("CALL", "PUT")
 
 
-def simulate(sim: UMSimulator, total_bytes: float, variant: str,
-             iters: int = ITERS) -> None:
+def workload(total_bytes: float, iters: int = ITERS) -> Workload:
     nb = int(total_bytes) // 5
+    w = WorkloadBuilder(NAME)
     for nm in INPUTS + OUTPUTS:
-        sim.alloc(nm, nb, role="input" if nm in INPUTS else "output")
+        w.alloc(nm, nb, role="input" if nm in INPUTS else "output")
     for nm in INPUTS:
-        sim.host_write(nm)
-
-    if variant == "explicit":
-        for nm in INPUTS:
-            sim.explicit_copy_to_device(nm)
-        for nm in OUTPUTS:
-            sim.explicit_alloc(nm)
-    if variant in ("um_advise", "um_both"):
-        for nm in INPUTS:
-            sim.advise_read_mostly(nm)
-    if variant in ("um_prefetch", "um_both"):
-        for nm in INPUTS:
-            sim.prefetch(nm)
+        w.host_write(nm)
+        w.advise_read_mostly(nm)
+        w.prefetch(nm)
 
     elems = nb / ELEM_BYTES
     for _ in range(iters):
-        sim.kernel("bs", flops=FLOPS_PER_ELEM * elems,
-                   reads=list(INPUTS), writes=list(OUTPUTS))
-    if variant == "explicit":
-        for nm in OUTPUTS:
-            sim.explicit_copy_to_host(nm)
-    else:
-        for nm in OUTPUTS:
-            sim.host_read(nm)
+        w.kernel("bs", flops=FLOPS_PER_ELEM * elems,
+                 reads=INPUTS, writes=OUTPUTS)
+    for nm in OUTPUTS:
+        w.readback(nm)
+    return w.build()
 
 
 def numeric(key, n: int = 4096):
     """Real JAX computation (Pallas kernel) for correctness/benchmarks."""
+    import jax
+
+    from repro.kernels import black_scholes as bs_kernel
+    from repro.kernels.black_scholes.ref import black_scholes_ref
+
     k1, k2, k3 = jax.random.split(key, 3)
     s = jax.random.uniform(k1, (n,), minval=5.0, maxval=30.0)
     x = jax.random.uniform(k2, (n,), minval=1.0, maxval=100.0)

@@ -4,64 +4,56 @@ Advise policy (paper §IV-A): PREFERRED_LOCATION(DEVICE) on the matrix and b
 (+ ACCESSED_BY(HOST) so host initialization writes remotely into device
 memory on coherent platforms — the P9 in-memory win), READ_MOSTLY on the
 sparse matrix after initialization.  The error is computed on the host after
-the solve (one host read).
+the solve (one host read, in *every* variant).  The placement advises are
+PRE_INIT hints — they must land before host initialization for the remote
+init path to engage.  Pure trace builder — variant lowering lives in
+``umbench.variants``.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.advise import Accessor, MemorySpace
-from repro.core.simulator import UMSimulator
+from repro.umbench.workload import PRE_INIT, Workload, WorkloadBuilder
 
 NAME = "cg"
 ITERS = 12
 
 
-def simulate(sim: UMSimulator, total_bytes: float, variant: str,
-             iters: int = ITERS) -> None:
+def workload(total_bytes: float, iters: int = ITERS) -> Workload:
     a_data = int(total_bytes * 0.55)
     a_idx = int(total_bytes * 0.25)
     vec = int(total_bytes * 0.05)
-    sim.alloc("A_data", a_data, role="matrix")
-    sim.alloc("A_idx", a_idx, role="matrix")
+    w = WorkloadBuilder(NAME)
+    w.alloc("A_data", a_data, role="matrix")
+    w.alloc("A_idx", a_idx, role="matrix")
     for nm in ("x", "b", "p", "q"):
-        sim.alloc(nm, vec, role="vector")
+        w.alloc(nm, vec, role="vector")
 
-    if variant in ("um_advise", "um_both"):
-        for nm in ("A_data", "A_idx", "b"):
-            sim.advise_preferred_location(nm, MemorySpace.DEVICE)
-            sim.advise_accessed_by(nm, Accessor.HOST)
+    for nm in ("A_data", "A_idx", "b"):
+        w.advise_preferred_location(nm, MemorySpace.DEVICE, when=PRE_INIT)
+        w.advise_accessed_by(nm, Accessor.HOST, when=PRE_INIT)
 
-    # host initialization (remote into device memory when advised + coherent)
     for nm in ("A_data", "A_idx", "b", "x", "p"):
-        sim.host_write(nm)
+        w.host_write(nm)
 
-    if variant == "explicit":
-        for nm in ("A_data", "A_idx", "b", "x", "p"):
-            sim.explicit_copy_to_device(nm)
-        sim.explicit_alloc("q")
-    if variant in ("um_advise", "um_both"):
-        sim.advise_read_mostly("A_data")
-        sim.advise_read_mostly("A_idx")
-    if variant in ("um_prefetch", "um_both"):
-        for nm in ("A_data", "A_idx", "b", "p"):
-            sim.prefetch(nm)
+    w.advise_read_mostly("A_data")
+    w.advise_read_mostly("A_idx")
+    w.prefetch("A_data", "A_idx", "b", "p")
 
     nnz = a_data / 4
     for _ in range(iters):
         # SpMV: q = A p
-        sim.kernel("spmv", flops=2.0 * nnz,
-                   reads=["A_data", "A_idx", "p"], writes=["q"])
+        w.kernel("spmv", flops=2.0 * nnz,
+                 reads=("A_data", "A_idx", "p"), writes=("q",))
         # dots + axpys on vectors
-        sim.kernel("blas1", flops=6.0 * (vec / 4),
-                   reads=["q", "p", "b"], writes=["x", "p"])
-    sim.host_read("x")
+        w.kernel("blas1", flops=6.0 * (vec / 4),
+                 reads=("q", "p", "b"), writes=("x", "p"))
+    w.host_read("x")
+    return w.build()
 
 
 def laplacian_csr(n: int):
     """1-D Laplacian (SPD, tridiagonal) in CSR for the numeric check."""
-    import numpy as np
+    import jax.numpy as jnp
 
     data, idx, ptr = [], [], [0]
     for i in range(n):
@@ -80,13 +72,20 @@ def laplacian_csr(n: int):
 
 def csr_matvec(data, idx, ptr, x, n_per_row: int = 3):
     """Gather-based CSR SpMV (rows have <= n_per_row entries, padded form)."""
+    import jax
+    import jax.numpy as jnp
+
     n = ptr.shape[0] - 1
-    row_ids = jnp.repeat(jnp.arange(n), jnp.diff(ptr), total_repeat_length=data.shape[0])
+    row_ids = jnp.repeat(jnp.arange(n), jnp.diff(ptr),
+                         total_repeat_length=data.shape[0])
     contrib = data * x[idx]
     return jax.ops.segment_sum(contrib, row_ids, num_segments=n)
 
 
 def cg_solve(data, idx, ptr, b, iters: int = 200, tol: float = 1e-8):
+    import jax
+    import jax.numpy as jnp
+
     n = b.shape[0]
     x = jnp.zeros_like(b)
     r = b - csr_matvec(data, idx, ptr, x)
@@ -108,8 +107,10 @@ def cg_solve(data, idx, ptr, b, iters: int = 200, tol: float = 1e-8):
 
 
 def numeric(key, n: int = 256):
+    import jax
+
     data, idx, ptr = laplacian_csr(n)
-    b = jax.random.normal(key, (n,), jnp.float32)
+    b = jax.random.normal(key, (n,), "float32")
     x, res = cg_solve(data, idx, ptr, b, iters=2 * n)
     return {"x": x, "residual": res, "b": b,
             "Ax": csr_matvec(data, idx, ptr, x)}

@@ -4,17 +4,15 @@ conv0 uses Real-to-Complex / Complex-to-Real plans (frequency buffers ~half
 the complex size); conv1/conv2 use Complex-to-Complex plans with different
 buffer splits.  Advise: PREFERRED_LOCATION(DEVICE) on the frequency
 workspaces (GPU-private), READ_MOSTLY on the kernel image.  Prefetch: the
-input image + kernel.
+input image + kernel.  Pure trace builders — variant lowering lives in
+``umbench.variants``.
 """
 from __future__ import annotations
 
 import math
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.advise import MemorySpace
-from repro.core.simulator import UMSimulator
+from repro.umbench.workload import Workload, WorkloadBuilder
 
 ITERS = 4
 
@@ -26,49 +24,43 @@ SPLITS = {
 }
 
 
-def make_simulate(kind: str):
+def make_workload(kind: str):
     fr = SPLITS[kind]
 
-    def simulate(sim: UMSimulator, total_bytes: float, variant: str,
-                 iters: int = ITERS) -> None:
+    def workload(total_bytes: float, iters: int = ITERS) -> Workload:
+        w = WorkloadBuilder(kind)
         names = ("img", "kern_img", "freq_img", "freq_kern", "out")
         for nm, f in zip(names, fr):
-            sim.alloc(nm, int(total_bytes * f), role="conv")
-        sim.host_write("img")
-        sim.host_write("kern_img")
+            w.alloc(nm, int(total_bytes * f), role="conv")
+        w.host_write("img")
+        w.host_write("kern_img")
 
-        if variant == "explicit":
-            sim.explicit_copy_to_device("img")
-            sim.explicit_copy_to_device("kern_img")
-            for nm in ("freq_img", "freq_kern", "out"):
-                sim.explicit_alloc(nm)
-        if variant in ("um_advise", "um_both"):
-            sim.advise_preferred_location("freq_img", MemorySpace.DEVICE)
-            sim.advise_preferred_location("freq_kern", MemorySpace.DEVICE)
-            sim.advise_read_mostly("kern_img")
-        if variant in ("um_prefetch", "um_both"):
-            sim.prefetch("img")
-            sim.prefetch("kern_img")
+        w.advise_preferred_location("freq_img", MemorySpace.DEVICE)
+        w.advise_preferred_location("freq_kern", MemorySpace.DEVICE)
+        w.advise_read_mostly("kern_img")
+        w.prefetch("img", "kern_img")
 
         n = int(total_bytes * fr[0]) / 8  # complex64 elements
         fft_flops = 5.0 * n * max(1.0, math.log2(max(n, 2)))
-        sim.kernel("fft_kern", flops=fft_flops * 0.1,
-                   reads=["kern_img"], writes=["freq_kern"])
+        w.kernel("fft_kern", flops=fft_flops * 0.1,
+                 reads=("kern_img",), writes=("freq_kern",))
         for _ in range(iters):
-            sim.kernel("fft_fwd", flops=fft_flops, reads=["img"], writes=["freq_img"])
-            sim.kernel("pointwise", flops=6.0 * n,
-                       reads=["freq_img", "freq_kern"], writes=["freq_img"])
-            sim.kernel("fft_inv", flops=fft_flops, reads=["freq_img"], writes=["out"])
-        if variant == "explicit":
-            sim.explicit_copy_to_host("out")
-        else:
-            sim.host_read("out")
+            w.kernel("fft_fwd", flops=fft_flops, reads=("img",),
+                     writes=("freq_img",))
+            w.kernel("pointwise", flops=6.0 * n,
+                     reads=("freq_img", "freq_kern"), writes=("freq_img",))
+            w.kernel("fft_inv", flops=fft_flops, reads=("freq_img",),
+                     writes=("out",))
+        w.readback("out")
+        return w.build()
 
-    return simulate
+    return workload
 
 
 def fft_convolve_2d(img, kern, *, real: bool):
     """Circular FFT convolution (the numeric oracle path)."""
+    import jax.numpy as jnp
+
     if real:
         fi = jnp.fft.rfft2(img)
         fk = jnp.fft.rfft2(kern, s=img.shape)
@@ -80,6 +72,8 @@ def fft_convolve_2d(img, kern, *, real: bool):
 
 def direct_convolve_2d(img, kern):
     """O(n^2 k^2) circular convolution for small-size validation."""
+    import jax.numpy as jnp
+
     H, W = img.shape
     kh, kw = kern.shape
     out = jnp.zeros_like(img)
@@ -90,6 +84,9 @@ def direct_convolve_2d(img, kern):
 
 
 def numeric(key, n: int = 32, real: bool = True):
+    import jax
+    import jax.numpy as jnp
+
     k1, k2 = jax.random.split(key)
     img = jax.random.normal(k1, (n, n), jnp.float32)
     kern = jax.random.normal(k2, (5, 5), jnp.float32)

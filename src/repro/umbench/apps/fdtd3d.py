@@ -2,61 +2,55 @@
 
 Reads/writes two equal arrays in an interleaving manner; both initialized
 with the same data.  Advise (paper §IV-B): PREFERRED_LOCATION(DEVICE) +
-ACCESSED_BY(HOST) on ONE array; nothing on the other; READ_MOSTLY only on
+ACCESSED_BY(HOST) on ONE array (PRE_INIT, so host initialization writes
+remotely on coherent fabrics); nothing on the other; READ_MOSTLY only on
 the small coefficient array.  Prefetch: only one of the two arrays (they
 start identical) — the paper's 60.9 s -> 45.3 s observation.
+Pure trace builder — variant lowering lives in ``umbench.variants``.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.advise import Accessor, MemorySpace
-from repro.core.simulator import UMSimulator
-from repro.kernels import fdtd3d_run
-from repro.kernels.fdtd3d.ref import fdtd3d_ref
+from repro.umbench.workload import PRE_INIT, Workload, WorkloadBuilder
 
 NAME = "fdtd3d"
 ITERS = 6
 COEF_BYTES = 4 * 1024
 
 
-def simulate(sim: UMSimulator, total_bytes: float, variant: str,
-             iters: int = ITERS) -> None:
+def workload(total_bytes: float, iters: int = ITERS) -> Workload:
     nb = (int(total_bytes) - COEF_BYTES) // 2
-    sim.alloc("U0", nb, role="field")
-    sim.alloc("U1", nb, role="field")
-    sim.alloc("COEF", COEF_BYTES, role="constants")
+    w = WorkloadBuilder(NAME)
+    w.alloc("U0", nb, role="field")
+    w.alloc("U1", nb, role="field")
+    w.alloc("COEF", COEF_BYTES, role="constants")
 
-    if variant in ("um_advise", "um_both"):
-        sim.advise_preferred_location("U0", MemorySpace.DEVICE)
-        sim.advise_accessed_by("U0", Accessor.HOST)
+    w.advise_preferred_location("U0", MemorySpace.DEVICE, when=PRE_INIT)
+    w.advise_accessed_by("U0", Accessor.HOST, when=PRE_INIT)
 
-    sim.host_write("U0")
-    sim.host_write("U1")
-    sim.host_write("COEF")
+    w.host_write("U0")
+    w.host_write("U1")
+    w.host_write("COEF")
 
-    if variant == "explicit":
-        for nm in ("U0", "U1", "COEF"):
-            sim.explicit_copy_to_device(nm)
-    if variant in ("um_advise", "um_both"):
-        sim.advise_read_mostly("COEF")
-    if variant in ("um_prefetch", "um_both"):
-        sim.prefetch("U0")   # only one array (paper §IV-B)
+    w.advise_read_mostly("COEF")
+    w.prefetch("U0")   # only one array (paper §IV-B)
 
     cells = nb / 4
     for i in range(iters):
         src, dst = ("U0", "U1") if i % 2 == 0 else ("U1", "U0")
-        sim.kernel("stencil", flops=27.0 * cells,
-                   reads=[src, "COEF"], writes=[dst])
-    out = "U1" if iters % 2 == 1 else "U0"
-    if variant == "explicit":
-        sim.explicit_copy_to_host(out)
-    else:
-        sim.host_read(out)
+        w.kernel("stencil", flops=27.0 * cells,
+                 reads=(src, "COEF"), writes=(dst,))
+    w.readback("U1" if iters % 2 == 1 else "U0")
+    return w.build()
 
 
 def numeric(key, shape=(16, 24, 136), steps: int = 3):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import fdtd3d_run
+    from repro.kernels.fdtd3d.ref import fdtd3d_ref
+
     grid = jax.random.normal(key, shape, jnp.float32)
     coeffs = jnp.array([0.55, 0.1, 0.02, 0.008, 0.002], jnp.float32)
 

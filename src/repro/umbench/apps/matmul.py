@@ -1,51 +1,42 @@
 """cuBLAS — single-precision GEMM (paper Table I).
 
 Advise: READ_MOSTLY on A and B (constant inputs).  Prefetch: A and B.
+Pure trace builder — variant lowering lives in ``umbench.variants``.
 """
 from __future__ import annotations
 
 import math
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.simulator import UMSimulator
-from repro.kernels import matmul as mm_kernel
-from repro.kernels.streamed_matmul.ref import matmul_ref
+from repro.umbench.workload import Workload, WorkloadBuilder
 
 NAME = "cublas"
 ITERS = 4
 
 
-def simulate(sim: UMSimulator, total_bytes: float, variant: str,
-             iters: int = ITERS) -> None:
+def workload(total_bytes: float, iters: int = ITERS) -> Workload:
     nb = int(total_bytes) // 3
     n = int(math.sqrt(nb / 4))
+    w = WorkloadBuilder(NAME)
     for nm in ("A", "B"):
-        sim.alloc(nm, nb, role="input")
-        sim.host_write(nm)
-    sim.alloc("C", nb, role="output")
-
-    if variant == "explicit":
-        sim.explicit_copy_to_device("A")
-        sim.explicit_copy_to_device("B")
-        sim.explicit_alloc("C")
-    if variant in ("um_advise", "um_both"):
-        sim.advise_read_mostly("A")
-        sim.advise_read_mostly("B")
-    if variant in ("um_prefetch", "um_both"):
-        sim.prefetch("A")
-        sim.prefetch("B")
+        w.alloc(nm, nb, role="input")
+        w.host_write(nm)
+        w.advise_read_mostly(nm)
+        w.prefetch(nm)
+    w.alloc("C", nb, role="output")
 
     for _ in range(iters):
-        sim.kernel("gemm", flops=2.0 * n**3, reads=["A", "B"], writes=["C"])
-    if variant == "explicit":
-        sim.explicit_copy_to_host("C")
-    else:
-        sim.host_read("C")
+        w.kernel("gemm", flops=2.0 * n**3, reads=("A", "B"), writes=("C",))
+    w.readback("C")
+    return w.build()
 
 
 def numeric(key, n: int = 512):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import matmul as mm_kernel
+    from repro.kernels.streamed_matmul.ref import matmul_ref
+
     k1, k2 = jax.random.split(key)
     a = jax.random.normal(k1, (n, n), jnp.float32)
     b = jax.random.normal(k2, (n, n), jnp.float32)

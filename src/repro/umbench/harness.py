@@ -1,6 +1,7 @@
 """umbench harness — the paper's experiment matrix (§III):
 
-  {explicit, um, um_advise, um_prefetch, um_both}
+  {explicit, um, um_advise, um_prefetch, um_both} (+ the beyond-paper
+   svm_remote tier in the extended sweep)
 × {in-memory (~80 % device mem), oversubscribed (~150 %), oversubscribed_2x
    (200 %, beyond-paper stress regime)}
 × platforms (Intel-Pascal/Volta PCIe, P9-Volta NVLink, Grace-Hopper C2C,
@@ -9,6 +10,15 @@
 × chunk granularity ("group" = 2 MB fault groups, the paper's driver block;
    "page" = 64 KB system pages, modelling the coherent-fabric fault
    explosion of Fig. 7c/8c directly).
+
+The variant axis is a real API (DESIGN.md §8): apps are declarative
+``Workload`` traces (``umbench.workload``), variants are ``VariantStrategy``
+objects resolved through ``umbench.variants``'s registry, and
+``run_cell(workload, strategy, platform, regime)`` lowers one onto the
+other.  String arguments are resolved through the registries, so the
+process pool ships names, not objects.  The pre-redesign string-based entry
+points (``APPS`` and per-app ``simulate``-style callables) survive as thin
+wrappers over the same path.
 
 Figure of merit: simulated GPU-kernel-time-plus-stalls (the paper's metric)
 with the paper's Fig. 4/7 breakdown (compute / fault stall / HtoD / DtoH).
@@ -23,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import os
 from concurrent.futures import ProcessPoolExecutor
-from typing import Callable, Sequence
+from typing import Callable
 
 from repro.core.simulator import (
     GB,
@@ -33,25 +43,46 @@ from repro.core.simulator import (
     UMSimulator,
 )
 from repro.umbench import platforms as plat
+from repro.umbench import variants as var
 from repro.umbench.apps import bfs, black_scholes, cg, conv_fft, fdtd3d, matmul
+from repro.umbench.workload import Workload
 
 VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
+# the paper's five variants plus the SVM remote-access-only tier
+EXTENDED_VARIANTS = VARIANTS + ("svm_remote",)
 REGIMES = {
     "in_memory": 0.80,
     "oversubscribed": 1.50,
     "oversubscribed_2x": 2.00,   # beyond-paper: 200 % oversubscription
 }
 
-APPS: dict[str, Callable] = {
-    "bs": black_scholes.simulate,
-    "cublas": matmul.simulate,
-    "cg": cg.simulate,
-    "graph500": bfs.simulate,
-    "conv0": conv_fft.make_simulate("conv0"),
-    "conv1": conv_fft.make_simulate("conv1"),
-    "conv2": conv_fft.make_simulate("conv2"),
-    "fdtd3d": fdtd3d.simulate,
+# app name -> workload builder: Callable[[total_bytes], Workload]
+WORKLOADS: dict[str, Callable[..., Workload]] = {
+    "bs": black_scholes.workload,
+    "cublas": matmul.workload,
+    "cg": cg.workload,
+    "graph500": bfs.workload,
+    "conv0": conv_fft.make_workload("conv0"),
+    "conv1": conv_fft.make_workload("conv1"),
+    "conv2": conv_fft.make_workload("conv2"),
+    "fdtd3d": fdtd3d.workload,
 }
+
+
+def _legacy_simulate(app: str) -> Callable:
+    """The pre-redesign per-app entry point, ``fn(sim, total_bytes, variant)``
+    — now a thin wrapper: build the trace, resolve the strategy, lower."""
+    def simulate(sim, total_bytes: float, variant: str,
+                 iters: int | None = None) -> None:
+        build = WORKLOADS[app]
+        workload = build(total_bytes) if iters is None else build(total_bytes,
+                                                                  iters=iters)
+        var.get_strategy(variant).lower(workload, sim)
+    simulate.__name__ = f"simulate_{app}"
+    return simulate
+
+
+APPS: dict[str, Callable] = {name: _legacy_simulate(name) for name in WORKLOADS}
 
 DEFAULT_PLATFORMS = ("intel-pascal-pcie", "intel-volta-pcie", "p9-volta-nvlink")
 # the seed matrix above, plus the coherent superchip and the stress regime
@@ -66,8 +97,8 @@ class CellResult:
     platform: str
     variant: str
     regime: str
-    report: SimReport | None      # None => N/A (explicit cannot oversubscribe)
-    granularity: str = "group"
+    report: SimReport | None      # None => N/A (explicit cannot oversubscribe;
+    granularity: str = "group"    # svm_remote needs a coherent fabric)
 
     @property
     def total_s(self) -> float | None:
@@ -95,28 +126,45 @@ class CellResult:
         }
 
 
-def run_cell(app: str, platform: SimPlatform, variant: str, regime: str,
+def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
+             platform: SimPlatform | str, regime: str,
              granularity: str = "group") -> CellResult:
-    total = REGIMES[regime] * platform.device_mem_gb * GB
-    sim = UMSimulator(platform, granularity=granularity)
+    """Run one matrix cell: lower ``workload`` through ``strategy`` onto a
+    fresh simulator.  ``workload``/``strategy``/``platform`` accept either
+    objects or registry names; a string workload is sized to the regime's
+    fraction of the platform's device memory (the paper's working-set rule).
+    """
+    p = plat.PLATFORMS[platform] if isinstance(platform, str) else platform
+    strat = var.get_strategy(strategy) if isinstance(strategy, str) else strategy
+    if isinstance(workload, str):
+        total = REGIMES[regime] * p.device_mem_gb * GB
+        workload = WORKLOADS[workload](total)
+    if not strat.available(p):
+        return CellResult(workload.name, p.name, strat.name, regime, None,
+                          granularity)
+    sim = UMSimulator(p, granularity=granularity)
     try:
-        APPS[app](sim, total, variant)
+        strat.lower(workload, sim)
         report = sim.finish()
     except OversubscriptionError:
         report = None  # the paper: 'the case does not exist with explicit'
-    return CellResult(app, platform.name, variant, regime, report, granularity)
+    return CellResult(workload.name, p.name, strat.name, regime, report,
+                      granularity)
 
 
-def _run_cell_spec(spec: tuple[str, str, str, str, str]) -> CellResult:
-    """Top-level (picklable) cell runner for the process pool."""
+def _run_cell_spec(spec: tuple) -> CellResult:
+    """Top-level (picklable) cell runner for the process pool.  ``variant``
+    may be a registry name or a VariantStrategy object — run_matrix resolves
+    names to objects before pooling so runtime-registered strategies survive
+    spawn-based workers (which re-import the registry's built-ins only)."""
     app, pname, variant, regime, granularity = spec
-    return run_cell(app, plat.PLATFORMS[pname], variant, regime, granularity)
+    return run_cell(app, variant, pname, regime, granularity)
 
 
 def matrix_specs(apps=None, platform_names=DEFAULT_PLATFORMS,
                  regimes=DEFAULT_REGIMES, variants=VARIANTS,
                  granularity: str = "group") -> list[tuple]:
-    apps = apps or list(APPS)
+    apps = apps or list(WORKLOADS)
     return [
         (app, pname, variant, regime, granularity)
         for regime in regimes
@@ -134,6 +182,8 @@ def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
     out over a process pool (cells are returned in matrix order either way)."""
     specs = matrix_specs(apps, platform_names, regimes, variants, granularity)
     if workers is not None and workers > 1:
+        specs = [(a, p, var.get_strategy(v) if isinstance(v, str) else v, r, g)
+                 for a, p, v, r, g in specs]
         with ProcessPoolExecutor(max_workers=workers) as pool:
             return list(pool.map(_run_cell_spec, specs,
                                  chunksize=max(1, len(specs) // (workers * 4))))
@@ -142,9 +192,11 @@ def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
 
 def run_extended_matrix(workers: int | None = None,
                         granularity: str = "group") -> list[CellResult]:
-    """The seed matrix plus the Grace-Hopper platform and the 200 % regime."""
+    """The seed matrix plus the Grace-Hopper platform, the 200 % regime, and
+    the svm_remote variant (N/A on platforms without a coherent fabric)."""
     return run_matrix(platform_names=EXTENDED_PLATFORMS,
                       regimes=EXTENDED_REGIMES,
+                      variants=EXTENDED_VARIANTS,
                       granularity=granularity, workers=workers)
 
 
@@ -153,14 +205,17 @@ def default_workers() -> int:
 
 
 def speedup_vs_um(results: list[CellResult]) -> dict[tuple, float]:
-    """(app, platform, regime, variant) -> total_time(um) / total_time(variant)."""
+    """(app, platform, regime, variant) -> total_time(um) / total_time(variant).
+
+    Cells with no report (N/A) and cells whose baseline ``um`` total is
+    missing or zero are skipped."""
     base = {
         (r.app, r.platform, r.regime): r.total_s
         for r in results if r.variant == "um" and r.total_s
     }
     out = {}
     for r in results:
-        if r.total_s is None:
+        if not r.total_s:       # N/A (None) or degenerate zero-total cells
             continue
         key = (r.app, r.platform, r.regime)
         if key in base:

@@ -1,0 +1,220 @@
+"""Pluggable memory-variant strategies — "how a variant executes a trace".
+
+A :class:`VariantStrategy` lowers a declarative ``workload.Workload`` onto a
+``UMSimulator``.  The lowering template (``lower``) is fixed — setup walk,
+one staging point, compute walk, teardown walk — and each strategy overrides
+only the hooks where the paper's variants actually differ:
+
+================  ============================================================
+``explicit``      cudaMalloc/cudaMemcpy staging of every host-initialized
+                  region; device-only regions are plain allocations; result
+                  readback is an explicit DtoH copy.  Oversubscription raises
+                  (paper: 'the case does not exist with explicit allocation').
+``um``            pure on-demand unified memory: no staging at all.
+``um_advise``     issues the workload's advise hints — PRE_INIT hints before
+                  host initialization, POST_INIT hints at the staging point —
+                  plus any role-based :class:`AdvisePolicy` at allocation time.
+``um_prefetch``   cudaMemPrefetchAsync of the workload's prefetch candidates
+                  at the staging point.
+``um_both``       advises, then prefetches (the paper's combined variant).
+``svm_remote``    beyond-paper (PAPERS.md: *Shared Virtual Memory: Its Design
+                  and Performance Implications for Diverse Applications*): an
+                  always-coherent, remote-access-only tier.  Data stays in
+                  host memory; the GPU reads/writes it through the coherent
+                  link at link bandwidth — no faults, no migration, no
+                  eviction, and therefore no oversubscription cliff.  Gated to
+                  platforms with coherent access in *both* directions
+                  (``host_can_access_device and device_can_access_host``);
+                  elsewhere the cell is N/A, like explicit-oversubscribed.
+================  ============================================================
+
+Strategies are stateless singletons held in a registry; ``get_strategy``
+resolves the string names the sweep engine and the process pool ship around.
+Registering a new strategy makes it a first-class member of the experiment
+matrix — no app changes required (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from repro.core.advise import Advise, AdvisePolicy, MemorySpace
+from repro.core.simulator import SimPlatform, UMSimulator
+
+from repro.umbench import workload as wk
+
+
+class VariantStrategy:
+    """Base lowering: the pure on-demand UM behaviour (no staging)."""
+
+    name = "um"
+    uses_advises = False
+
+    def available(self, platform: SimPlatform) -> bool:
+        """Whether this memory model exists on ``platform`` (False => N/A)."""
+        return True
+
+    # -- the lowering template -------------------------------------------------
+    def lower(self, workload: wk.Workload, sim: UMSimulator) -> None:
+        # PRE_INIT hints are issued before host initialization of their
+        # region: at each host write, every not-yet-issued hint whose region
+        # is already allocated goes out (in hint order).  Hints on regions
+        # allocated later wait for a later write; validate() guarantees the
+        # region exists by the end of setup.
+        pre = list(workload.advises_at(wk.PRE_INIT)) if self.uses_advises else []
+        for step in workload.setup:
+            if pre and isinstance(step, wk.HostWrite):
+                ready = [h for h in pre if h.name in sim.regions]
+                self._issue_advises(sim, ready)
+                pre = [h for h in pre if h.name not in sim.regions]
+            if isinstance(step, wk.Alloc):
+                sim.alloc(step.name, step.nbytes, role=step.role)
+                self.on_alloc(sim, step)
+            else:
+                sim.host_write(step.name, step.nbytes)
+        if pre:
+            self._issue_advises(sim, pre)
+        self.stage(sim, workload)
+        for step in workload.compute:
+            if isinstance(step, wk.KernelStep):
+                sim.kernel(step.name, flops=step.flops, reads=list(step.reads),
+                           writes=list(step.writes),
+                           bytes_touched=step.bytes_touched,
+                           partial=step.partial_map())
+            elif isinstance(step, wk.HostWrite):
+                sim.host_write(step.name, step.nbytes)
+            elif isinstance(step, wk.ReadBack):
+                # mid-trace readback (e.g. a staged output drain) lowers the
+                # same way as a trailing one
+                self.read_result(sim, step.name)
+            else:
+                sim.host_read(step.name, step.nbytes)
+        for step in workload.teardown:
+            if isinstance(step, wk.ReadBack):
+                self.read_result(sim, step.name)
+            else:
+                sim.host_read(step.name, step.nbytes)
+
+    # -- hooks -----------------------------------------------------------------
+    def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
+        """Called right after each allocation (e.g. role-based advises)."""
+
+    def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        """Called once, between host initialization and the first kernel."""
+
+    def read_result(self, sim: UMSimulator, name: str) -> None:
+        sim.host_read(name)
+
+    @staticmethod
+    def _issue_advises(sim: UMSimulator, hints) -> None:
+        for h in hints:
+            d = h.directive
+            if d.advise is Advise.READ_MOSTLY:
+                sim.advise_read_mostly(h.name)
+            elif d.advise is Advise.PREFERRED_LOCATION:
+                sim.advise_preferred_location(h.name, d.location)
+            else:
+                sim.advise_accessed_by(h.name, d.accessor)
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class UMStrategy(VariantStrategy):
+    name = "um"
+
+
+class ExplicitStrategy(VariantStrategy):
+    name = "explicit"
+
+    def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        for nm in workload.host_written():
+            sim.explicit_copy_to_device(nm)
+        for nm in workload.device_only():
+            sim.explicit_alloc(nm)
+
+    def read_result(self, sim: UMSimulator, name: str) -> None:
+        sim.explicit_copy_to_host(name)
+
+
+class UMAdviseStrategy(VariantStrategy):
+    """Issues the workload's advise hints; an optional role-based
+    :class:`AdvisePolicy` contributes extra directives at allocation time
+    (equivalent to issuing them right after cudaMallocManaged)."""
+
+    name = "um_advise"
+    uses_advises = True
+
+    def __init__(self, policy: AdvisePolicy | None = None):
+        self.policy = policy
+
+    def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
+        if self.policy is None:
+            return
+        for key in (step.name, step.role):
+            hints = [wk.AdviseHint(step.name, d) for d in self.policy.for_role(key)]
+            self._issue_advises(sim, hints)
+
+    def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        self._issue_advises(sim, workload.advises_at(wk.POST_INIT))
+
+
+class UMPrefetchStrategy(VariantStrategy):
+    name = "um_prefetch"
+
+    def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        for nm in workload.prefetch:
+            sim.prefetch(nm)
+
+
+class UMBothStrategy(UMAdviseStrategy):
+    name = "um_both"
+
+    def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        super().stage(sim, workload)
+        for nm in workload.prefetch:
+            sim.prefetch(nm)
+
+
+class SVMRemoteStrategy(VariantStrategy):
+    """SVM-style always-coherent tier: every allocation is pinned to host
+    memory and the device accesses it remotely over the coherent link.
+    Lowered through the simulator's PREFERRED_LOCATION(HOST) + zero-copy
+    path, so kernels account remote traffic at
+    ``link_bw * remote_access_efficiency`` instead of migrating."""
+
+    name = "svm_remote"
+
+    def available(self, platform: SimPlatform) -> bool:
+        return platform.host_can_access_device and platform.device_can_access_host
+
+    def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
+        sim.advise_preferred_location(step.name, MemorySpace.HOST)
+
+
+# -- registry ------------------------------------------------------------------
+
+_REGISTRY: dict[str, VariantStrategy] = {}
+
+
+def register(strategy: VariantStrategy, *, replace: bool = False) -> VariantStrategy:
+    if not strategy.name:
+        raise ValueError("strategy needs a non-empty name")
+    if strategy.name in _REGISTRY and not replace:
+        raise ValueError(f"strategy {strategy.name!r} already registered")
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> VariantStrategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown variant {name!r}; registered: {strategy_names()}") from None
+
+
+def strategy_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+for _s in (ExplicitStrategy(), UMStrategy(), UMAdviseStrategy(),
+           UMPrefetchStrategy(), UMBothStrategy(), SVMRemoteStrategy()):
+    register(_s)

@@ -1,0 +1,247 @@
+"""Frozen pre-redesign app lowerings — parity oracle ONLY.
+
+These are the six apps' ``simulate(sim, total_bytes, variant)`` functions
+exactly as they stood before the Workload/VariantStrategy redesign (inline
+``if variant == ...`` blocks against the simulator's imperative API).  They
+exist so tests/test_workload_parity.py can prove that every pre-existing
+matrix cell produces identical SimReport counters through the new
+declarative API.  Do not extend them — new variants/apps go through
+``umbench.workload`` + ``umbench.variants``.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.advise import Accessor, MemorySpace
+
+
+def bs_simulate(sim, total_bytes, variant, iters=8):
+    INPUTS = ("S", "X", "T")
+    OUTPUTS = ("CALL", "PUT")
+    nb = int(total_bytes) // 5
+    for nm in INPUTS + OUTPUTS:
+        sim.alloc(nm, nb, role="input" if nm in INPUTS else "output")
+    for nm in INPUTS:
+        sim.host_write(nm)
+
+    if variant == "explicit":
+        for nm in INPUTS:
+            sim.explicit_copy_to_device(nm)
+        for nm in OUTPUTS:
+            sim.explicit_alloc(nm)
+    if variant in ("um_advise", "um_both"):
+        for nm in INPUTS:
+            sim.advise_read_mostly(nm)
+    if variant in ("um_prefetch", "um_both"):
+        for nm in INPUTS:
+            sim.prefetch(nm)
+
+    elems = nb / 4
+    for _ in range(iters):
+        sim.kernel("bs", flops=60.0 * elems,
+                   reads=list(INPUTS), writes=list(OUTPUTS))
+    if variant == "explicit":
+        for nm in OUTPUTS:
+            sim.explicit_copy_to_host(nm)
+    else:
+        for nm in OUTPUTS:
+            sim.host_read(nm)
+
+
+def matmul_simulate(sim, total_bytes, variant, iters=4):
+    nb = int(total_bytes) // 3
+    n = int(math.sqrt(nb / 4))
+    for nm in ("A", "B"):
+        sim.alloc(nm, nb, role="input")
+        sim.host_write(nm)
+    sim.alloc("C", nb, role="output")
+
+    if variant == "explicit":
+        sim.explicit_copy_to_device("A")
+        sim.explicit_copy_to_device("B")
+        sim.explicit_alloc("C")
+    if variant in ("um_advise", "um_both"):
+        sim.advise_read_mostly("A")
+        sim.advise_read_mostly("B")
+    if variant in ("um_prefetch", "um_both"):
+        sim.prefetch("A")
+        sim.prefetch("B")
+
+    for _ in range(iters):
+        sim.kernel("gemm", flops=2.0 * n**3, reads=["A", "B"], writes=["C"])
+    if variant == "explicit":
+        sim.explicit_copy_to_host("C")
+    else:
+        sim.host_read("C")
+
+
+def cg_simulate(sim, total_bytes, variant, iters=12):
+    a_data = int(total_bytes * 0.55)
+    a_idx = int(total_bytes * 0.25)
+    vec = int(total_bytes * 0.05)
+    sim.alloc("A_data", a_data, role="matrix")
+    sim.alloc("A_idx", a_idx, role="matrix")
+    for nm in ("x", "b", "p", "q"):
+        sim.alloc(nm, vec, role="vector")
+
+    if variant in ("um_advise", "um_both"):
+        for nm in ("A_data", "A_idx", "b"):
+            sim.advise_preferred_location(nm, MemorySpace.DEVICE)
+            sim.advise_accessed_by(nm, Accessor.HOST)
+
+    for nm in ("A_data", "A_idx", "b", "x", "p"):
+        sim.host_write(nm)
+
+    if variant == "explicit":
+        for nm in ("A_data", "A_idx", "b", "x", "p"):
+            sim.explicit_copy_to_device(nm)
+        sim.explicit_alloc("q")
+    if variant in ("um_advise", "um_both"):
+        sim.advise_read_mostly("A_data")
+        sim.advise_read_mostly("A_idx")
+    if variant in ("um_prefetch", "um_both"):
+        for nm in ("A_data", "A_idx", "b", "p"):
+            sim.prefetch(nm)
+
+    nnz = a_data / 4
+    for _ in range(iters):
+        sim.kernel("spmv", flops=2.0 * nnz,
+                   reads=["A_data", "A_idx", "p"], writes=["q"])
+        sim.kernel("blas1", flops=6.0 * (vec / 4),
+                   reads=["q", "p", "b"], writes=["x", "p"])
+    sim.host_read("x")
+
+
+def bfs_simulate(sim, total_bytes, variant, iters=8):
+    col = int(total_bytes * 0.70)
+    row = int(total_bytes * 0.10)
+    state = int(total_bytes * 0.20) // 3
+    sim.alloc("col_idx", col, role="graph")
+    sim.alloc("row_ptr", row, role="graph")
+    for nm in ("frontier", "visited", "parent"):
+        sim.alloc(nm, state, role="state")
+    sim.host_write("col_idx")
+    sim.host_write("row_ptr")
+    sim.host_write("frontier", state)
+
+    if variant == "explicit":
+        for nm in ("col_idx", "row_ptr", "frontier"):
+            sim.explicit_copy_to_device(nm)
+        sim.explicit_alloc("visited")
+        sim.explicit_alloc("parent")
+    if variant in ("um_advise", "um_both"):
+        sim.advise_preferred_location("col_idx", MemorySpace.DEVICE)
+        sim.advise_read_mostly("row_ptr")
+    if variant in ("um_prefetch", "um_both"):
+        sim.prefetch("col_idx")
+        sim.prefetch("row_ptr")
+
+    edges = col / 8
+    for _ in range(iters):
+        sim.kernel(
+            "bfs_level",
+            flops=4.0 * edges / iters,
+            reads=["col_idx", "row_ptr", "frontier", "visited"],
+            writes=["frontier", "visited", "parent"],
+            partial={"col_idx": 1.0 / iters},
+        )
+    if variant == "explicit":
+        sim.explicit_copy_to_host("parent")
+    else:
+        sim.host_read("parent")
+
+
+_CONV_SPLITS = {
+    "conv0": (0.28, 0.02, 0.22, 0.20, 0.28),
+    "conv1": (0.20, 0.02, 0.29, 0.29, 0.20),
+    "conv2": (0.22, 0.02, 0.27, 0.27, 0.22),
+}
+
+
+def make_conv_simulate(kind):
+    fr = _CONV_SPLITS[kind]
+
+    def simulate(sim, total_bytes, variant, iters=4):
+        names = ("img", "kern_img", "freq_img", "freq_kern", "out")
+        for nm, f in zip(names, fr):
+            sim.alloc(nm, int(total_bytes * f), role="conv")
+        sim.host_write("img")
+        sim.host_write("kern_img")
+
+        if variant == "explicit":
+            sim.explicit_copy_to_device("img")
+            sim.explicit_copy_to_device("kern_img")
+            for nm in ("freq_img", "freq_kern", "out"):
+                sim.explicit_alloc(nm)
+        if variant in ("um_advise", "um_both"):
+            sim.advise_preferred_location("freq_img", MemorySpace.DEVICE)
+            sim.advise_preferred_location("freq_kern", MemorySpace.DEVICE)
+            sim.advise_read_mostly("kern_img")
+        if variant in ("um_prefetch", "um_both"):
+            sim.prefetch("img")
+            sim.prefetch("kern_img")
+
+        n = int(total_bytes * fr[0]) / 8
+        fft_flops = 5.0 * n * max(1.0, math.log2(max(n, 2)))
+        sim.kernel("fft_kern", flops=fft_flops * 0.1,
+                   reads=["kern_img"], writes=["freq_kern"])
+        for _ in range(iters):
+            sim.kernel("fft_fwd", flops=fft_flops, reads=["img"],
+                       writes=["freq_img"])
+            sim.kernel("pointwise", flops=6.0 * n,
+                       reads=["freq_img", "freq_kern"], writes=["freq_img"])
+            sim.kernel("fft_inv", flops=fft_flops, reads=["freq_img"],
+                       writes=["out"])
+        if variant == "explicit":
+            sim.explicit_copy_to_host("out")
+        else:
+            sim.host_read("out")
+
+    return simulate
+
+
+def fdtd3d_simulate(sim, total_bytes, variant, iters=6):
+    COEF_BYTES = 4 * 1024
+    nb = (int(total_bytes) - COEF_BYTES) // 2
+    sim.alloc("U0", nb, role="field")
+    sim.alloc("U1", nb, role="field")
+    sim.alloc("COEF", COEF_BYTES, role="constants")
+
+    if variant in ("um_advise", "um_both"):
+        sim.advise_preferred_location("U0", MemorySpace.DEVICE)
+        sim.advise_accessed_by("U0", Accessor.HOST)
+
+    sim.host_write("U0")
+    sim.host_write("U1")
+    sim.host_write("COEF")
+
+    if variant == "explicit":
+        for nm in ("U0", "U1", "COEF"):
+            sim.explicit_copy_to_device(nm)
+    if variant in ("um_advise", "um_both"):
+        sim.advise_read_mostly("COEF")
+    if variant in ("um_prefetch", "um_both"):
+        sim.prefetch("U0")
+
+    cells = nb / 4
+    for i in range(iters):
+        src, dst = ("U0", "U1") if i % 2 == 0 else ("U1", "U0")
+        sim.kernel("stencil", flops=27.0 * cells,
+                   reads=[src, "COEF"], writes=[dst])
+    out = "U1" if iters % 2 == 1 else "U0"
+    if variant == "explicit":
+        sim.explicit_copy_to_host(out)
+    else:
+        sim.host_read(out)
+
+
+LEGACY_APPS = {
+    "bs": bs_simulate,
+    "cublas": matmul_simulate,
+    "cg": cg_simulate,
+    "graph500": bfs_simulate,
+    "conv0": make_conv_simulate("conv0"),
+    "conv1": make_conv_simulate("conv1"),
+    "conv2": make_conv_simulate("conv2"),
+    "fdtd3d": fdtd3d_simulate,
+}

@@ -21,6 +21,8 @@ def test_extended_matrix_definitions():
     assert "grace-hopper-c2c" in plat.PLATFORMS
     assert "oversubscribed_2x" in EXTENDED_REGIMES
     assert REGIMES["oversubscribed_2x"] == 2.0
+    from repro.umbench.harness import EXTENDED_VARIANTS, VARIANTS
+    assert EXTENDED_VARIANTS == VARIANTS + ("svm_remote",)
 
 
 def test_grace_hopper_from_run_matrix():
@@ -61,15 +63,15 @@ def test_page_granularity_from_run_matrix():
     sp = speedup_vs_um(res)
     assert sp[("bs", "p9-volta-nvlink", "oversubscribed", "um_advise")] < 0.5
     page = next(r for r in res if r.variant == "um_advise").report
-    group = run_cell("bs", plat.P9_VOLTA, "um_advise", "oversubscribed").report
+    group = run_cell("bs", "um_advise", plat.P9_VOLTA, "oversubscribed").report
     assert page.n_faults == pytest.approx(group.n_faults, rel=0.01)
 
 
 def test_page_granularity_in_memory_fault_counts_comparable():
     """Outside the pressure path, page-mode faults coalesce per 2 MB group
     span, so in-memory fault counts match group granularity."""
-    g = run_cell("bs", plat.INTEL_PASCAL, "um", "in_memory").report
-    p = run_cell("bs", plat.INTEL_PASCAL, "um", "in_memory",
+    g = run_cell("bs", "um", plat.INTEL_PASCAL, "in_memory").report
+    p = run_cell("bs", "um", plat.INTEL_PASCAL, "in_memory",
                  granularity="page").report
     assert p.n_faults == pytest.approx(g.n_faults, rel=0.01)
     assert p.htod_bytes == g.htod_bytes

@@ -1,0 +1,339 @@
+"""Workload/VariantStrategy API: builder validation, registry behaviour,
+the svm_remote tier, the harness cell helpers (satellite coverage for
+``speedup_vs_um`` and ``CellResult.row``), and the no-JAX import path."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.advise import AdvisePolicy, MemorySpace, set_read_mostly
+from repro.core.simulator import GB, MB, SimReport, UMSimulator
+from repro.umbench import platforms as plat
+from repro.umbench import variants as var
+from repro.umbench.harness import (
+    EXTENDED_VARIANTS,
+    CellResult,
+    run_cell,
+    run_matrix,
+    speedup_vs_um,
+)
+from repro.umbench.workload import PRE_INIT, WorkloadBuilder
+
+
+# -- workload builder ----------------------------------------------------------
+
+def _toy_workload(rm=False):
+    w = WorkloadBuilder("toy")
+    w.alloc("a", 64 * MB, role="input").host_write("a")
+    w.alloc("out", 64 * MB, role="output")
+    if rm:
+        w.advise_read_mostly("a")
+    w.prefetch("a")
+    w.kernel("k", flops=1e9, reads=("a",), writes=("out",))
+    w.readback("out")
+    return w.build()
+
+
+def test_builder_phases_and_derived_sets():
+    wl = _toy_workload()
+    assert [type(s).__name__ for s in wl.setup] == [
+        "Alloc", "HostWrite", "Alloc"]
+    assert len(wl.compute) == 1 and len(wl.teardown) == 1
+    assert wl.host_written() == ("a",)
+    assert wl.device_only() == ("out",)
+
+
+def test_builder_rejects_unknown_names_and_late_allocs():
+    w = WorkloadBuilder("bad").alloc("a", MB)
+    w.kernel("k", flops=1.0, reads=("a", "ghost"), writes=())
+    with pytest.raises(ValueError, match="ghost"):
+        w.build()
+    w2 = WorkloadBuilder("late").alloc("a", MB)
+    w2.kernel("k", flops=1.0, reads=("a",), writes=())
+    with pytest.raises(ValueError, match="after first kernel"):
+        w2.alloc("b", MB)
+
+
+def test_builder_rejects_duplicate_alloc():
+    w = WorkloadBuilder("dup").alloc("a", MB).alloc("a", MB)
+    with pytest.raises(ValueError, match="duplicate"):
+        w.build()
+
+
+def test_validate_rejects_write_before_alloc():
+    w = WorkloadBuilder("order").host_write("a").alloc("a", MB)
+    w.kernel("k", flops=1.0, reads=("a",), writes=())
+    with pytest.raises(ValueError, match="before its Alloc"):
+        w.build()
+
+
+def test_validate_rejects_misfiled_phase_steps():
+    """Hand-built Workloads (bypassing the builder) must fail loudly when a
+    step sits in the wrong phase, not lower as the wrong simulator call."""
+    from repro.umbench.workload import Alloc, HostRead, Workload
+
+    with pytest.raises(ValueError, match="HostRead not allowed in setup"):
+        Workload("bad", setup=(Alloc("a", MB), HostRead("a")),
+                 compute=(), teardown=()).validate()
+    with pytest.raises(ValueError, match="Alloc not allowed in compute"):
+        Workload("bad", setup=(Alloc("a", MB),),
+                 compute=(Alloc("b", MB),), teardown=()).validate()
+
+
+def test_runtime_registered_strategy_survives_pool():
+    """run_matrix resolves strategy names to objects before pooling, so a
+    runtime-registered (module-importable) strategy works under workers>1
+    even where spawn-based workers would re-import only the built-ins."""
+    strat = var.SVMRemoteStrategy()
+    strat.name = "svm_pool_test"
+    var.register(strat)
+    try:
+        res = run_matrix(apps=["bs"], platform_names=("p9-volta-nvlink",),
+                         regimes=("in_memory",),
+                         variants=("um", "svm_pool_test"), workers=2)
+        by = {r.variant: r for r in res}
+        assert by["svm_pool_test"].report is not None
+        assert by["svm_pool_test"].report.n_faults == 0
+    finally:
+        var._REGISTRY.pop("svm_pool_test")
+
+
+def test_pre_init_advise_lands_before_host_write():
+    """A PRE_INIT PREFERRED_LOCATION(DEVICE) hint must engage the coherent
+    remote-initialization path: the host write goes over the fabric instead
+    of faulting pages back."""
+    w = WorkloadBuilder("pin")
+    w.alloc("a", 64 * MB)
+    w.advise_preferred_location("a", MemorySpace.DEVICE, when=PRE_INIT)
+    w.host_write("a")
+    w.kernel("k", flops=1.0, reads=("a",), writes=())
+    wl = w.build()
+    sim = UMSimulator(plat.P9_VOLTA)
+    var.get_strategy("um_advise").lower(wl, sim)
+    r = sim.finish()
+    assert r.remote_bytes == 64 * MB      # init written remotely
+    assert r.n_faults == 0
+
+
+def test_mid_trace_readback_lowers_per_variant():
+    """A ReadBack between kernels (staged output drain) is legal and lowers
+    variant-dependently, same as a trailing one."""
+    def build():
+        w = WorkloadBuilder("drain")
+        w.alloc("a", 64 * MB).host_write("a")
+        w.alloc("o", 64 * MB)
+        w.kernel("k1", flops=1e9, reads=("a",), writes=("o",))
+        w.readback("o")
+        w.kernel("k2", flops=1e9, reads=("a",), writes=("o",))
+        w.readback("o")
+        return w.build()
+
+    wl = build()
+    assert any(type(s).__name__ == "ReadBack" for s in wl.compute)
+    reports = {}
+    for name in ("um", "explicit"):
+        sim = UMSimulator(plat.INTEL_PASCAL)
+        var.get_strategy(name).lower(wl, sim)
+        reports[name] = sim.finish()
+    assert reports["um"].dtoh_bytes > 0
+    assert reports["explicit"].dtoh_bytes > 0
+
+
+def test_pre_init_advise_on_late_alloc_waits_for_its_region():
+    """A PRE_INIT hint on a region allocated after the first host write is
+    issued once its region exists (before that region's own init), not
+    crashed into an unallocated name."""
+    w = WorkloadBuilder("late-pin")
+    w.alloc("A", 64 * MB).host_write("A")
+    w.alloc("B", 64 * MB)
+    w.advise_preferred_location("B", MemorySpace.DEVICE, when=PRE_INIT)
+    w.host_write("B")
+    w.kernel("k", flops=1.0, reads=("A", "B"), writes=())
+    wl = w.build()
+    sim = UMSimulator(plat.P9_VOLTA)
+    var.get_strategy("um_advise").lower(wl, sim)
+    r = sim.finish()
+    assert r.remote_bytes == 64 * MB      # B's init written remotely
+
+
+# -- registry ------------------------------------------------------------------
+
+def test_registry_contents_and_errors():
+    assert set(var.strategy_names()) >= set(EXTENDED_VARIANTS)
+    with pytest.raises(KeyError, match="unknown variant"):
+        var.get_strategy("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        var.register(var.UMStrategy())
+
+
+def test_new_strategy_is_a_matrix_axis():
+    """Registering a strategy makes it sweepable with zero app changes —
+    the redesign's point."""
+
+    class NoopStrategy(var.VariantStrategy):
+        name = "um_noop_test"
+
+    var.register(NoopStrategy())
+    try:
+        res = run_matrix(apps=["bs"], platform_names=("intel-pascal-pcie",),
+                         regimes=("in_memory",),
+                         variants=("um", "um_noop_test"))
+        by = {r.variant: r for r in res}
+        assert by["um_noop_test"].row() == {**by["um"].row(),
+                                            "variant": "um_noop_test"}
+    finally:
+        var._REGISTRY.pop("um_noop_test")
+
+
+def test_advise_policy_consumed_by_strategy():
+    """Role-based AdvisePolicy now flows through the strategy, not the
+    simulator constructor: a read-mostly role turns evictions of that
+    region's chunks into free drops."""
+    policy = AdvisePolicy().advise("input", set_read_mostly())
+    strat = var.UMAdviseStrategy(policy=policy)
+    wl = _toy_workload()
+    sim = UMSimulator(plat.INTEL_PASCAL)
+    strat.lower(wl, sim)
+    assert sim.regions["a"].read_mostly           # via role "input"
+    assert not sim.regions["out"].read_mostly     # role "output": untouched
+
+
+# -- svm_remote ----------------------------------------------------------------
+
+def test_svm_remote_gating():
+    svm = var.get_strategy("svm_remote")
+    assert svm.available(plat.P9_VOLTA)
+    assert svm.available(plat.GRACE_HOPPER)
+    assert not svm.available(plat.INTEL_PASCAL)
+    assert not svm.available(plat.TPU_V5E)
+    assert run_cell("bs", "svm_remote", "intel-volta-pcie",
+                    "in_memory").report is None
+
+
+def test_svm_remote_never_migrates():
+    """The SVM tier is remote-access-only: no faults, no migration traffic,
+    no evictions — and therefore no oversubscription cliff (it completes
+    at 200 % where explicit raises)."""
+    for regime in ("in_memory", "oversubscribed_2x"):
+        r = run_cell("cg", "svm_remote", "grace-hopper-c2c", regime).report
+        assert r is not None
+        assert r.n_faults == 0 and r.n_evictions == 0
+        assert r.htod_bytes == 0 and r.dtoh_bytes == 0
+        assert r.remote_bytes > 0
+        assert r.total_s == pytest.approx(r.compute_s + r.remote_s)
+
+
+def test_svm_remote_access_vs_migrate_tradeoff():
+    """The Schieffer et al. access-vs-migrate tradeoff: with heavy reuse
+    (BS re-reads its inputs every iteration) migrating once (um) beats
+    re-reading remotely every pass on P9, while svm_remote's cost scales
+    smoothly with the working set instead of cliffing."""
+    sp = speedup_vs_um(run_matrix(
+        apps=["bs"], platform_names=("p9-volta-nvlink",),
+        regimes=("in_memory",), variants=("um", "svm_remote")))
+    assert sp[("bs", "p9-volta-nvlink", "in_memory", "svm_remote")] < 1.0
+
+
+def test_svm_remote_in_extended_sweep_table(monkeypatch):
+    """svm_remote is a sixth variant of the extended sweep and shows up in
+    ``table_extended_sweep`` (N/A where the platform lacks coherent remote
+    access).  The table is fed a small pre-run slab via the memo so tier-1
+    does not pay for the full 576-cell extended sweep."""
+    from benchmarks import paper_tables
+
+    res = run_matrix(apps=["bs", "cg"],
+                     platform_names=("intel-volta-pcie", "grace-hopper-c2c"),
+                     regimes=("in_memory",), variants=EXTENDED_VARIANTS)
+    by = {(r.platform, r.variant): r for r in res if r.app == "bs"}
+    assert by[("intel-volta-pcie", "svm_remote")].report is None     # N/A
+    assert by[("grace-hopper-c2c", "svm_remote")].report is not None
+    monkeypatch.setattr(paper_tables, "_EXTENDED", res)
+    rows = paper_tables.table_extended_sweep()
+    svm_rows = [r for r in rows if ",svm_remote," in r]
+    assert any(",intel-volta-pcie," in r and r.endswith("NA,NA")
+               for r in svm_rows)
+    assert any(",grace-hopper-c2c," in r and not r.endswith("NA,NA")
+               for r in svm_rows)
+
+
+# -- harness helpers (satellite: speedup_vs_um / CellResult.row) ---------------
+
+def _cell(variant, total=1.0, report=True, **kw):
+    rep = None
+    if report:
+        rep = SimReport(total_s=total, compute_s=total)
+    return CellResult("app", "plat", variant, "in_memory", rep, **kw)
+
+
+def test_speedup_vs_um_skips_na_and_zero_total():
+    cells = [
+        _cell("um", total=2.0),
+        _cell("um_advise", total=1.0),
+        _cell("explicit", report=False),          # N/A: excluded
+        _cell("um_prefetch", total=0.0),          # zero-total: excluded
+    ]
+    sp = speedup_vs_um(cells)
+    assert sp[("app", "plat", "in_memory", "um_advise")] == 2.0
+    assert ("app", "plat", "in_memory", "explicit") not in sp
+    assert ("app", "plat", "in_memory", "um_prefetch") not in sp
+
+
+def test_speedup_vs_um_skips_zero_um_baseline():
+    cells = [_cell("um", total=0.0), _cell("um_advise", total=1.0)]
+    assert speedup_vs_um(cells) == {}
+
+
+def test_cell_result_row_na_and_json_round_trip():
+    na = _cell("explicit", report=False).row()
+    assert na["total_s"] is None
+    assert "faults" not in na and "compute_s" not in na
+    full = run_cell("bs", "um", "intel-pascal-pcie", "in_memory").row()
+    assert full["faults"] > 0
+    for row in (na, full):
+        assert json.loads(json.dumps(row)) == row
+
+
+# -- satellite: perf-trajectory deltas vs the previous artifact ----------------
+
+def test_bench_cell_deltas():
+    from benchmarks.run import cell_deltas
+
+    def row(variant, total):
+        return {"app": "bs", "platform": "p", "variant": variant,
+                "regime": "in_memory", "granularity": "group",
+                "total_s": total}
+
+    prev = [row("um", 2.0), row("um_advise", 1.0), row("explicit", None)]
+    cur = [row("um", 2.2), row("um_advise", 1.0), row("explicit", None),
+           row("svm_remote", 3.0)]                     # new cell: not compared
+    d = cell_deltas(prev, cur)
+    assert d["cells_compared"] == 3
+    assert d["cells_new"] == 1
+    assert d["cells_changed"] == 1
+    assert d["cells_removed"] == 0
+    assert cell_deltas(prev, cur[1:])["cells_removed"] == 1  # shrunken sweep
+    (chg,) = d["changed"]
+    assert chg["cell"][2] == "um"
+    assert chg["delta_pct"] == pytest.approx(10.0)
+    assert json.loads(json.dumps(d)) == d
+
+
+# -- satellite: the sweep engine must not need JAX -----------------------------
+
+def test_harness_runs_without_jax():
+    """Apps lazy-import JAX inside their numeric() helpers, so building and
+    sweeping workloads must work with JAX unimportable."""
+    code = (
+        "import sys; sys.modules['jax'] = None;"
+        "from repro.umbench.harness import run_matrix, speedup_vs_um;"
+        "res = run_matrix(apps=['bs'], platform_names=('intel-pascal-pcie',),"
+        "                 regimes=('in_memory',));"
+        "assert len(res) == 5 and all(r.report is not None or"
+        "                             r.variant == 'explicit' for r in res);"
+        "print('ok')"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "ok"

@@ -1,0 +1,94 @@
+"""Golden parity for the Workload/VariantStrategy redesign.
+
+Every pre-existing matrix cell — the full seed 240-cell sweep
+({8 apps} x {3 platforms} x {5 variants} x {2 regimes}) — must produce
+identical SimReport counters (exact ints) and times (<=1e-9 relative)
+through the new declarative API (``Workload`` built by the app +
+``VariantStrategy`` lowering) as through the old per-app imperative code
+paths, which are frozen verbatim in ``tests/_legacy_apps.py``.
+
+Extended cells (grace-hopper-c2c, the 200 % regime) are covered by a
+sampled set — the full extended sweep crosses ~3 s grace-hopper cells and
+would dominate tier-1 wall-clock.
+"""
+import dataclasses
+import itertools
+
+import pytest
+
+from _legacy_apps import LEGACY_APPS
+from repro.core.simulator import GB, OversubscriptionError, UMSimulator
+from repro.umbench import platforms as plat
+from repro.umbench.harness import (
+    DEFAULT_PLATFORMS,
+    DEFAULT_REGIMES,
+    REGIMES,
+    VARIANTS,
+    WORKLOADS,
+    run_cell,
+)
+
+COUNTERS = ("htod_bytes", "dtoh_bytes", "remote_bytes",
+            "n_faults", "n_evictions", "n_dropped")
+TIMES = ("compute_s", "fault_stall_s", "htod_s", "dtoh_s", "remote_s",
+         "total_s")
+
+EXTENDED_SAMPLE = [
+    ("bs", "grace-hopper-c2c", "um", "in_memory"),
+    ("bs", "grace-hopper-c2c", "um_advise", "in_memory"),
+    ("bs", "intel-pascal-pcie", "um", "oversubscribed_2x"),
+    ("cg", "intel-pascal-pcie", "um_advise", "oversubscribed_2x"),
+    ("bs", "intel-volta-pcie", "um_both", "oversubscribed_2x"),
+    ("graph500", "intel-pascal-pcie", "um_prefetch", "oversubscribed_2x"),
+]
+
+
+def _legacy_report(app, platform, variant, regime):
+    sim = UMSimulator(platform)
+    try:
+        LEGACY_APPS[app](sim, REGIMES[regime] * platform.device_mem_gb * GB,
+                         variant)
+        return sim.finish()
+    except OversubscriptionError:
+        return None
+
+
+def _assert_cell_parity(app, pname, variant, regime):
+    platform = plat.PLATFORMS[pname]
+    want = _legacy_report(app, platform, variant, regime)
+    got = run_cell(app, variant, pname, regime).report
+    assert (got is None) == (want is None), (app, pname, variant, regime)
+    if want is None:
+        return
+    g, w = dataclasses.asdict(got), dataclasses.asdict(want)
+    for k in COUNTERS:
+        assert int(g[k]) == int(w[k]), (app, pname, variant, regime, k)
+    for k in TIMES:
+        assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), (
+            app, pname, variant, regime, k, g[k], w[k])
+
+
+@pytest.mark.parametrize("pname", DEFAULT_PLATFORMS)
+@pytest.mark.parametrize("regime", DEFAULT_REGIMES)
+def test_full_seed_matrix_parity(pname, regime):
+    """All pre-existing cells of one (platform, regime) slab — together the
+    parametrized cases cover the entire 240-cell seed matrix."""
+    for app, variant in itertools.product(WORKLOADS, VARIANTS):
+        _assert_cell_parity(app, pname, variant, regime)
+
+
+@pytest.mark.parametrize("app,pname,variant,regime", EXTENDED_SAMPLE)
+def test_extended_cell_parity(app, pname, variant, regime):
+    _assert_cell_parity(app, pname, variant, regime)
+
+
+def test_legacy_apps_wrapper_signature():
+    """The old string-based entry points survive as thin wrappers: the
+    ``APPS[app](sim, total_bytes, variant)`` shape still works (the seed
+    parity suite drives both engines through it)."""
+    from repro.umbench.harness import APPS
+
+    assert set(APPS) == set(WORKLOADS)
+    sim = UMSimulator(plat.INTEL_PASCAL)
+    APPS["bs"](sim, 0.5 * plat.INTEL_PASCAL.device_mem_gb * GB, "um")
+    assert sim.finish().total_s > 0
