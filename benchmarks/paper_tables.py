@@ -22,6 +22,7 @@ from repro.umbench.harness import (
     CellResult,
     default_workers,
     run_matrix,
+    run_page_matrix,
     speedup_vs_um,
 )
 from repro.umbench.platforms import PLATFORMS
@@ -32,6 +33,10 @@ VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
 
 _MATRIX: list[CellResult] | None = None
 _EXTENDED: list[CellResult] | None = None
+_PAGE: list[CellResult] | None = None
+# workers actually handed to the pooled sweeps (run.py records this so the
+# BENCH artifact's sweep_workers matches the pool that really ran)
+LAST_SWEEP_WORKERS: int | None = None
 
 
 def matrix_cells(extended: bool = False,
@@ -39,19 +44,31 @@ def matrix_cells(extended: bool = False,
     """The (memoized) matrix sweep; ``extended`` adds grace-hopper-c2c, the
     200 % regime, and the svm_remote variant on top of the seed 240 cells,
     fanned over ``workers`` processes (default: one per core)."""
-    global _MATRIX, _EXTENDED
+    global _MATRIX, _EXTENDED, LAST_SWEEP_WORKERS
     if extended:
         if _EXTENDED is None:
+            LAST_SWEEP_WORKERS = workers or default_workers()
             _EXTENDED = run_matrix(
                 platform_names=EXTENDED_PLATFORMS,
                 regimes=("in_memory", "oversubscribed", "oversubscribed_2x"),
                 variants=EXTENDED_VARIANTS,
-                workers=workers or default_workers(),
+                workers=LAST_SWEEP_WORKERS,
             )
         return _EXTENDED
     if _MATRIX is None:
         _MATRIX = run_matrix()
     return _MATRIX
+
+
+def page_cells(workers: int | None = None) -> list[CellResult]:
+    """The (memoized) full-matrix 64 KB page-granularity sweep — every app x
+    extended platform x extended variant x regime cell with chunk state
+    tracked per system page (the Fig. 7c/8c fault-explosion axis)."""
+    global _PAGE, LAST_SWEEP_WORKERS
+    if _PAGE is None:
+        LAST_SWEEP_WORKERS = workers or default_workers()
+        _PAGE = run_page_matrix(workers=LAST_SWEEP_WORKERS)
+    return _PAGE
 
 
 def _index(cells) -> dict[tuple, CellResult]:
@@ -143,6 +160,30 @@ def table_extended_sweep() -> list[str]:
         s = sp.get((c.app, c.platform, c.regime, c.variant))
         s = "NA" if s is None else f"{s:.2f}"
         rows.append(f"ext,{c.app},{c.platform},{c.regime},{c.variant},{t},{s}")
+    return rows
+
+
+def table_page_granularity() -> list[str]:
+    """The full experiment matrix re-swept at 64 KB system-page granularity
+    (one fault per page under coherent-fabric pressure — the paper's
+    Fig. 7c/8c fault explosion modelled directly, not via the ``size //
+    page_bytes`` shortcut).  Each row carries the fault-count blow-up vs the
+    same cell at 2 MB fault-group granularity."""
+    group = {(c.app, c.platform, c.variant, c.regime): c
+             for c in matrix_cells(extended=True)}
+    rows = ["table,app,platform,regime,variant,total_s,faults,"
+            "fault_blowup_vs_group"]
+    for c in page_cells():
+        t = "NA" if c.total_s is None else f"{c.total_s:.4f}"
+        g = group.get((c.app, c.platform, c.variant, c.regime))
+        blow = "NA"
+        faults = "NA"
+        if c.report is not None:
+            faults = str(c.report.n_faults)
+            if g is not None and g.report is not None and g.report.n_faults:
+                blow = f"{c.report.n_faults / g.report.n_faults:.2f}"
+        rows.append(f"page,{c.app},{c.platform},{c.regime},{c.variant},"
+                    f"{t},{faults},{blow}")
     return rows
 
 

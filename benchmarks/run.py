@@ -6,6 +6,7 @@ Emits, as CSV blocks:
   fig4_7        traced-app breakdowns (compute/stall/HtoD/DtoH)
   claims        headline-claim summary vs paper expectations
   ext           extended sweep (grace-hopper-c2c + 200 % regime) [not --fast]
+  page          full-matrix 64 KB page-granularity sweep [not --fast]
   table1        working-set sizing
   lm            per-arch reduced train/decode step timings (real CPU)
   kernel        Pallas-kernel call timings (interpret mode) vs jnp oracle
@@ -34,23 +35,42 @@ SEED_BASELINE_MATRIX_240_S = 58.8
 BENCH_PATH = "BENCH_umbench.json"
 
 
-def _cell_key(row: dict) -> tuple:
-    return (row["app"], row["platform"], row["variant"], row["regime"],
-            row.get("granularity", "group"))
+def _cell_key(row) -> tuple | None:
+    """Matching key for a benchmark cell row, or None when the row cannot
+    carry one (a malformed/pre-PR-1-schema artifact row — e.g. a plain
+    string, or a dict missing app/platform/variant/regime).  ``granularity``
+    alone may be absent (pre-page-mode artifacts default to "group")."""
+    if not isinstance(row, dict):
+        return None
+    try:
+        key = (row["app"], row["platform"], row["variant"], row["regime"],
+               row.get("granularity", "group"))
+        hash(key)       # unhashable field values (e.g. lists) -> unmatchable
+    except (KeyError, TypeError):
+        return None
+    return key
 
 
 def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
     """Per-cell simulated-total deltas vs the previous artifact.  Cells are
     matched on (app, platform, variant, regime, granularity); only changed
     cells are listed (sorted by |delta|, worst first) so an unchanged sweep
-    produces an empty list, not 240 zeros."""
-    prev = {_cell_key(r): r.get("total_s") for r in prev_cells}
-    cur_keys = {_cell_key(r) for r in cells}
+    produces an empty list, not 240 zeros.  Prior-artifact rows without a
+    usable key (older schema) are unmatchable: they count as removed, and
+    current cells they would have matched count as new — the diff degrades
+    instead of raising."""
+    prev = {}
+    for r in prev_cells:
+        key = _cell_key(r)
+        if key is not None:
+            prev[key] = r.get("total_s")
+    unmatchable_prev = len(prev_cells) - len(prev)
+    cur_keys = {k for k in (_cell_key(r) for r in cells) if k is not None}
     changed = []
     compared = 0
     for row in cells:
         key = _cell_key(row)
-        if key not in prev:
+        if key is None or key not in prev:
             continue
         compared += 1
         old, new = prev[key], row.get("total_s")
@@ -68,7 +88,7 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
         "cells_new": len(cells) - compared,
         # cells the predecessor had but this sweep lost — a non-zero count
         # means matrix coverage shrank, not that performance held
-        "cells_removed": len(set(prev) - cur_keys),
+        "cells_removed": len(set(prev) - cur_keys) + unmatchable_prev,
         "changed": changed,
     }
 
@@ -98,6 +118,7 @@ def main() -> None:
     timed("fig4_7", paper_tables.table_fig4_7_breakdowns)
     if not fast:
         timed("ext", paper_tables.table_extended_sweep)
+        timed("page", paper_tables.table_page_granularity)
         timed("kernel", lm_bench.kernel_rows)
         timed("lm", lm_bench.arch_step_rows)
     timed("roofline", roofline.roofline_rows)
@@ -116,13 +137,16 @@ def main() -> None:
                     prev = json.load(f)
             except (OSError, ValueError):
                 prev = None
-        from repro.umbench.harness import default_workers
-
-        # the extended sweep (already memoized by the ext block above) fans
-        # out over default_workers() processes; the seed 240-cell matrix
-        # stays serial (it IS the wall-clock gate)
-        sweep_workers = default_workers() if not fast else 1
+        # the extended and page sweeps (already memoized by the ext/page
+        # blocks above) fanned out over default_workers() processes; the
+        # seed 240-cell matrix stays serial (it IS the wall-clock gate).
+        # Record the pool those sweeps REALLY used — the pre-fix artifact
+        # recorded 1 while run_matrix's pool sat unused.
         cells = paper_tables.matrix_cells(extended=not fast)
+        if not fast:
+            cells = cells + paper_tables.page_cells()
+        sweep_workers = (paper_tables.LAST_SWEEP_WORKERS or 1) if not fast \
+            else 1
         rows = [c.row() for c in cells]
         payload = {
             "matrix_240_wall_s": round(matrix_wall, 3),
@@ -131,6 +155,10 @@ def main() -> None:
                                      / max(matrix_wall, 1e-9), 1),
             "sweep_workers": sweep_workers,
             "block_wall_s": timings,
+            # the full-matrix page-granularity sweep's wall clock, tracked
+            # PR-over-PR like matrix_240_wall_s (absent in --fast runs)
+            **({"page_matrix_wall_s": timings.get("page")} if not fast
+               else {}),
             "n_cells": len(cells),
             "cells": rows,
         }

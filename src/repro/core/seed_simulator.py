@@ -141,6 +141,13 @@ class UMSimulator:
     def _resident_add(self, key) -> None:
         (self._res_pin if self._is_pinned(key) else self._res_un)[key] = True
 
+    def residency_snapshot(self) -> list[tuple[str, int]]:
+        """(region name, chunk) pairs in queue-filed pop order — the literal
+        OrderedDict contents, unpinned queue then pinned queue.  Oracle hook
+        for the vectorized engine's incremental residency index
+        (tests/test_residency_index.py compares it after every op)."""
+        return list(self._res_un) + list(self._res_pin)
+
     # -- capacity ------------------------------------------------------------
     @property
     def device_capacity(self) -> int:

@@ -40,16 +40,17 @@ stall the compute stream (massive parallelism means a faulting kernel makes
 no progress — paper §II-A).  The report exposes the same breakdown as the
 paper's Fig. 4/7: compute, fault stall, HtoD time, DtoH time.
 
-Implementation (DESIGN.md §Simulator internals): per-region chunk state is
-NumPy arrays (``on_device`` / ``duplicated`` / ``populated`` / ``arrival`` /
-``stamp``), residency order is a monotone int64 stamp instead of the seed's
-OrderedDict queues, and every public call processes whole chunk-index runs
-with batched fault-group, transfer-time, and eviction accounting.  The seed
-per-chunk model is preserved verbatim in ``repro.core.seed_simulator`` and
+Implementation (DESIGN.md §3/§9): per-region chunk state is NumPy arrays
+(``on_device`` / ``duplicated`` / ``populated`` / ``arrival`` / ``stamp``),
+residency order lives in an incrementally maintained, run-coalesced
+``ResidencyIndex`` (two append-ordered run queues mirroring the seed's
+OrderedDicts — nothing is gathered or sorted per eviction plan), and every
+public call processes whole chunk-index runs with batched fault-group,
+transfer-time, and eviction accounting.  The seed per-chunk model is
+preserved verbatim in ``repro.core.seed_simulator`` and
 tests/test_simulator_parity.py proves the two agree counter-for-counter.
-Rare orderings the batched cut cannot express (lazy pin reclassification,
-eviction dipping into the batch being inserted) fall back to exact scalar
-paths.
+Rare orderings the batched plan cannot express (lazy pin reclassification)
+fall back to exact scalar paths.
 
 Granularity: ``UMSimulator(..., granularity="page")`` allocates at the
 64 KB system-page size instead of the 2 MB fault group, modelling the
@@ -67,7 +68,13 @@ from typing import Mapping
 import numpy as np
 
 from repro.core.advise import Accessor, MemorySpace
-from repro.core.residency import eviction_cut, victim_order
+from repro.core.residency import (
+    ResidencyIndex,
+    chunk_runs,
+    expand_m_segs,
+    expand_runs,
+    merge_pop_runs,
+)
 
 KB = 1024
 MB = 1024 * KB
@@ -101,10 +108,17 @@ class Region:
 
     ``on_device`` is the authoritative-copy location (seed ``loc``);
     ``duplicated`` marks read-mostly device duplicates (host copy valid);
-    ``stamp``/``in_pin_queue`` encode the residency order (see
-    residency.victim_order); ``arrival`` is the copy-stream completion time
-    of in-flight prefetches.  A chunk is device-resident iff
-    ``on_device | duplicated``.
+    ``stamp``/``in_pin_queue`` encode the residency order for the scalar
+    anomaly path (see residency.victim_order); ``arrival`` is the
+    copy-stream completion time of in-flight prefetches.  A chunk is
+    device-resident iff ``on_device | duplicated``.
+
+    Residency-queue membership is run-coalesced (DESIGN.md §9):
+    ``entry_ptr[i]`` points at the chunk's live run entry in the simulator's
+    :class:`~repro.core.residency.ResidencyIndex` (encoded ``entry * 2 +
+    queue``, -1 when not filed), and ``q_live`` counts this region's live
+    chunks per queue — the O(regions) pin-reclassification anomaly check
+    that used to require gathering every resident chunk.
     """
 
     def __init__(self, name: str, nbytes: int, role: str = "data",
@@ -131,6 +145,9 @@ class Region:
         self.arrival = np.zeros(n, dtype=np.float64)
         self.stamp = np.zeros(n, dtype=np.int64)
         self.in_pin_queue = np.zeros(n, dtype=bool)
+        self.entry_ptr = np.full(n, -1, dtype=np.int64)
+        self.q_live = [0, 0]        # live chunks in (unpinned, pinned) queue
+        self.slot = -1              # position in the simulator's region list
 
     def chunk_size(self, idx: int) -> int:
         return int(self.sizes[idx])
@@ -198,6 +215,8 @@ class UMSimulator:
         self.t_copy = 0.0            # copy stream clock
         self.device_used = 0         # bytes resident on device
         self._clock = 0              # residency-order stamp source
+        self._rlist: list[Region] = []      # regions in allocation order
+        self._index = ResidencyIndex()      # run-coalesced residency queues
         # set once eviction has happened: the memory-pressure regime in which
         # coherent platforms lose the block-duplication heuristic (see header)
         self._pressure = False
@@ -212,6 +231,8 @@ class UMSimulator:
         if name in self.regions:
             raise ValueError(f"region {name} exists")
         r = Region(name, int(nbytes), role=role, chunk_bytes=self.chunk_bytes)
+        r.slot = len(self._rlist)
+        self._rlist.append(r)
         self.regions[name] = r
         return r
 
@@ -247,11 +268,93 @@ class UMSimulator:
         self._clock += n
         return s
 
+    def _index_append(self, r: Region, ids: np.ndarray) -> None:
+        """File ``ids`` (already stamped, ``in_pin_queue`` set) at the tail
+        of their queue as coalesced runs, in ``ids`` order."""
+        pinq = r.in_pin_queue[ids]
+        for qi in (0, 1):
+            sub = ids[pinq] if qi else ids[~pinq]
+            if not len(sub):
+                continue
+            starts, lengths, csizes = chunk_runs(sub, r.sizes[sub])
+            self._index.queue(qi).append(r.slot, starts, lengths, csizes,
+                                         self._rlist)
+            r.q_live[qi] += len(sub)
+
+    def _index_remove(self, r: Region, ids: np.ndarray) -> None:
+        """Un-file ``ids`` from their queue entries (lazy run shrink)."""
+        enc = r.entry_ptr[ids]
+        r.entry_ptr[ids] = -1
+        n = len(ids)
+        e0 = int(enc[0])
+        if n == 1 or (e0 == enc[-1] and (enc == e0).all()):
+            # fast path: one entry covers the whole batch (the common case —
+            # batches are runs, runs live in one entry)
+            qi = e0 & 1
+            self._index.queue(qi).remove(e0 >> 1, n, int(ids.min()),
+                                         int(ids.max()))
+            r.q_live[qi] -= n
+            return
+        order = np.argsort(enc, kind="stable")
+        enc_s = enc[order]
+        ids_s = ids[order]
+        bounds = np.concatenate(
+            [[0], np.flatnonzero(np.diff(enc_s) != 0) + 1, [len(enc_s)]])
+        for a, b in zip(bounds[:-1].tolist(), bounds[1:].tolist()):
+            e = int(enc_s[a])
+            grp = ids_s[a:b]
+            qi = e & 1
+            self._index.queue(qi).remove(e >> 1, b - a, int(grp.min()),
+                                         int(grp.max()))
+            r.q_live[qi] -= b - a
+
+    def _queue_anomaly(self) -> bool:
+        """True when any region holds live chunks filed under a queue that
+        disagrees with its *current* pin state — the seed reclassifies such
+        chunks lazily at pop time, so callers must take the scalar path.
+        O(regions), replacing the old per-chunk ``in_pin_queue != pnow``
+        scan over a full gather."""
+        for r in self._rlist:
+            pinned = r.preferred is MemorySpace.DEVICE
+            if r.q_live[1 if not pinned else 0]:
+                return True
+        return False
+
+    def _pop_runs(self):
+        return self._index.pop_runs(self._rlist)
+
+    def _expand_victims(self, regs, starts, cnts, csz, upto: int | None = None):
+        """Expand victim runs (pop order) to per-chunk arrays
+        (reg_ids, chunk_ids, sizes, dups), optionally only the first
+        ``upto`` chunks."""
+        if upto is not None:
+            ccum = np.cumsum(cnts)
+            j = int(np.searchsorted(ccum, upto, side="left"))
+            prev = int(ccum[j - 1]) if j else 0
+            regs = regs[:j + 1]
+            starts = starts[:j + 1]
+            cnts = cnts[:j + 1].copy()
+            csz = csz[:j + 1]
+            cnts[j] = upto - prev
+        reg_ids = np.repeat(regs, cnts)
+        chunk_ids = expand_runs(starts, cnts)
+        sizes = np.repeat(csz, cnts)
+        dups = np.empty(len(chunk_ids), dtype=bool)
+        pos = 0
+        for k in range(len(regs)):
+            c = int(cnts[k])
+            r = self._rlist[int(regs[k])]
+            s = int(starts[k])
+            dups[pos:pos + c] = r.duplicated[s:s + c]
+            pos += c
+        return reg_ids, chunk_ids, sizes, dups
+
     def _insert_resident(self, r: Region, ids: np.ndarray, *, duplicate) -> None:
         """Batch _mark_resident for chunks known to be non-resident.
 
         ``duplicate`` is a scalar bool or a per-chunk bool array.  Stamps are
-        assigned in ``ids`` order — exactly the seed's insertion order.
+        assigned in ``ids`` order — exactly the seed's insertion order — and
+        the chunks are filed at the tail of their residency queue.
         """
         self.device_used += int(r.sizes[ids].sum())
         r.stamp[ids] = self._stamps(len(ids))
@@ -259,15 +362,40 @@ class UMSimulator:
         dup = np.broadcast_to(np.asarray(duplicate, dtype=bool), (len(ids),))
         r.duplicated[ids[dup]] = True
         r.on_device[ids[~dup]] = True
+        self._index_append(r, ids)
 
     def _touch(self, r: Region, ids: np.ndarray) -> None:
         """Move touched chunks to the back of their queue (seed move_to_end):
-        re-stamping preserves relative order within each queue."""
-        r.stamp[ids] = self._stamps(len(ids))
+        re-stamping preserves relative order within each queue, and the
+        index entries are re-filed at the tail of the same queue."""
+        n = len(ids)
+        enc = r.entry_ptr[ids]
+        e0 = int(enc[0])
+        if n == 1 or (e0 == enc[-1] and (enc == e0).all()):
+            q = self._index.queue(e0 & 1)
+            e = e0 >> 1
+            if (e == q.tail - 1 and int(q.nlive[e]) == n
+                    and int(ids[0]) == int(q.start[e])):
+                # the batch IS the queue's whole tail entry, touched in the
+                # entry's own ascending order (ids are ascending or
+                # wrapped-ascending — see chunk_runs; a wrapped touch never
+                # starts at the entry's first chunk): move_to_end preserves
+                # order exactly, so skip the re-file (the common
+                # steady-state re-touch of a resident region).  A wrapped
+                # touch (partial kernel whose cursor sits mid-entry) falls
+                # through and re-files in touch order, as the seed does.
+                return
+        r.stamp[ids] = self._stamps(n)
+        self._index_remove(r, ids)
+        self._index_append(r, ids)
 
-    def _gather_resident(self):
+    def _gather_resident_scalar(self):
         """Concatenate (region, chunk, stamp, size, dup, in_pin, pinned_now)
-        over all device-resident chunks — the materialized residency queues."""
+        over all device-resident chunks — a full rebuild of the residency
+        queues from per-chunk state.  Only the scalar anomaly path uses
+        this; every hot path reads the incremental ``_index`` instead
+        (DESIGN.md §9 has the migration note for the old
+        ``_gather_resident``)."""
         rlist = []
         regs, idxs, stamps, sizes, dups, pinq, pnow = [], [], [], [], [], [], []
         for r in self.regions.values():
@@ -289,6 +417,37 @@ class UMSimulator:
                 np.concatenate(dups), np.concatenate(pinq),
                 np.concatenate(pnow))
 
+    def residency_snapshot(self) -> list[tuple[str, int]]:
+        """(region name, chunk) pairs in queue-filed pop order — the
+        unpinned queue then the pinned queue, exactly the seed's OrderedDict
+        contents.  Test/introspection hook."""
+        pop = self._pop_runs()
+        if pop is None:
+            return []
+        regs, starts, cnts, _, _ = pop
+        out: list[tuple[str, int]] = []
+        for k in range(len(regs)):
+            name = self._rlist[int(regs[k])].name
+            s = int(starts[k])
+            out.extend((name, i) for i in range(s, s + int(cnts[k])))
+        return out
+
+    def _debug_validate(self) -> None:
+        """Index/state consistency invariants (tests only — O(chunks))."""
+        live_bytes = 0
+        for r in self._rlist:
+            res = r.resident_mask()
+            assert np.array_equal(res, r.entry_ptr >= 0), r.name
+            filed_pin = r.in_pin_queue[res]
+            assert r.q_live[0] == int((~filed_pin).sum()), r.name
+            assert r.q_live[1] == int(filed_pin.sum()), r.name
+            live_bytes += int(r.sizes[res].sum())
+        assert live_bytes == self.device_used
+        assert (self._index.un.live_bytes
+                + self._index.pin.live_bytes) == live_bytes
+        snap = self.residency_snapshot()
+        assert len(snap) == self._index.live_chunks
+
     def _apply_evictions(self, rlist, reg_ids, chunk_ids, sizes, dups) -> None:
         """State + accounting for a batch of victims (order-independent:
         all per-victim effects are additive)."""
@@ -308,10 +467,16 @@ class UMSimulator:
             # eviction write-back is on the critical path of the allocation
             # that triggered it
             self.t_device += t
-        for ri in np.unique(reg_ids):
+        r0 = int(reg_ids[0])
+        if r0 == reg_ids[-1] and (reg_ids == r0).all():
+            groups = [(r0, slice(None))]       # single-region batch (common)
+        else:
+            groups = [(int(ri), reg_ids == ri) for ri in np.unique(reg_ids)]
+        for ri, sel in groups:
             r = rlist[ri]
-            ids = chunk_ids[reg_ids == ri]
-            d = dups[reg_ids == ri]
+            ids = chunk_ids[sel]
+            d = dups[sel]
+            self._index_remove(r, ids)
             r.duplicated[ids[d]] = False       # free drop (host copy valid)
             r.on_device[ids[~d]] = False       # migrated back to host
 
@@ -322,33 +487,44 @@ class UMSimulator:
         are a last resort, mirroring CUDA treating the advise as a hint.
         Duplicated (read-mostly) chunks are dropped for free; migrated chunks
         pay a DtoH transfer — UM *moves* pages, so the host has no copy.
+
+        Victims come straight off the incremental index: a run-level cumsum
+        finds the boundary run, and only the actual victims are ever
+        expanded to chunks (the seed's pop loop, ``eviction_cut``-exact
+        including exact-fit boundaries and the all-drained over-drain).
         """
         self._pressure = True
         need_free = self.device_used + need - self.device_capacity
         if need_free <= 0:
             return
-        g = self._gather_resident()
-        if g is None:
-            raise OversubscriptionError(f"cannot free {need} bytes")
-        rlist, regs, idxs, stamps, sizes, dups, pinq, pnow = g
-        order, anomaly = victim_order(stamps, pinq, pnow)
-        if anomaly:
+        if self._queue_anomaly():
             self._evict_for_scalar(need)
             return
-        cut = eviction_cut(sizes[order], need_free)
-        if cut is None:
-            self._apply_evictions(rlist, regs[order], idxs[order],
-                                  sizes[order], dups[order])
+        pop = self._pop_runs()
+        if pop is None:
             raise OversubscriptionError(f"cannot free {need} bytes")
-        sel = order[:cut]
-        self._apply_evictions(rlist, regs[sel], idxs[sel], sizes[sel], dups[sel])
+        regs, starts, cnts, csz, _ = pop
+        rcum = np.cumsum(cnts * csz)
+        if int(rcum[-1]) < need_free:
+            # over-drain: the seed pops *everything*, then raises
+            self._apply_evictions(self._rlist,
+                                  *self._expand_victims(regs, starts, cnts, csz))
+            raise OversubscriptionError(f"cannot free {need} bytes")
+        j = int(np.searchsorted(rcum, need_free, side="left"))
+        prev = int(rcum[j - 1]) if j else 0
+        within = -((prev - need_free) // int(csz[j]))   # ceil, >= 1
+        upto = int(cnts[:j].sum()) + within
+        self._apply_evictions(
+            self._rlist, *self._expand_victims(regs, starts, cnts, csz,
+                                               upto=upto))
 
     def _evict_for_scalar(self, need: int) -> None:
         """Pop-by-pop eviction replicating the seed's lazy queue
         reclassification (a region's pin advise changed after its chunks
-        were filed).  Only reached when victim_order flags an anomaly."""
+        were filed).  Only reached when the per-region queue counters flag
+        an anomaly; rebuilds the queues from chunk state per pop."""
         while self.device_used + need > self.device_capacity:
-            g = self._gather_resident()
+            g = self._gather_resident_scalar()
             if g is None:
                 raise OversubscriptionError(f"cannot free {need} bytes")
             rlist, regs, idxs, stamps, sizes, dups, pinq, pnow = g
@@ -357,19 +533,26 @@ class UMSimulator:
                 j = un[np.argmin(stamps[un])]
                 r = rlist[regs[j]]
                 if pnow[j]:                  # advise changed since insert
-                    r.in_pin_queue[idxs[j]] = True
-                    r.stamp[idxs[j]] = self._stamps(1)[0]
+                    self._refile(r, int(idxs[j]), pinned=True)
                     continue
             else:
                 pin = np.nonzero(pinq)[0]
                 j = pin[np.argmin(stamps[pin])]
                 r = rlist[regs[j]]
                 if not pnow[j]:              # un-pinned since insert
-                    r.in_pin_queue[idxs[j]] = False
-                    r.stamp[idxs[j]] = self._stamps(1)[0]
+                    self._refile(r, int(idxs[j]), pinned=False)
                     continue
             self._apply_evictions(rlist, regs[j:j + 1], idxs[j:j + 1],
                                   sizes[j:j + 1], dups[j:j + 1])
+
+    def _refile(self, r: Region, idx: int, *, pinned: bool) -> None:
+        """Move one chunk to the tail of the other queue (the seed's lazy
+        pop-time reclassification), keeping the index in step."""
+        one = np.array([idx])
+        self._index_remove(r, one)
+        r.in_pin_queue[idx] = pinned
+        r.stamp[idx] = self._stamps(1)[0]
+        self._index_append(r, one)
 
     # -- fault-event coalescing -------------------------------------------------
     def _n_fault_events(self, r: Region, ids: np.ndarray) -> int:
@@ -426,103 +609,95 @@ class UMSimulator:
         batch's own just-inserted chunks interleaved wherever the seed would
         pop them — plus ``m[i]``, the number of victims consumed before chunk
         i's insertion.  When the deficit is covered by a pure prefix of the
-        old queues this is a cumsum cut; otherwise an O(n) integer merge
-        replays the seed's queue dynamics (own chunks join their region's
-        queue as they are inserted and may be evicted by later chunks of the
-        same batch — the streaming-thrash regime).  Returns None when pin
+        old queues this is a run-level cumsum cut off the incremental index;
+        otherwise ``residency.merge_pop_runs`` replays the seed's queue
+        dynamics in O(runs) (own chunks join their region's queue as they
+        are inserted and may be evicted by later chunks of the same batch —
+        the streaming-thrash regime).  Either way only consumed victims are
+        expanded to chunk granularity.  Returns None when pin
         reclassification anomalies exist or the deficit cannot be covered at
         all (the seed then raises); callers take the scalar path.
         """
         region_pinned = r.preferred is MemorySpace.DEVICE
-        g = self._gather_resident()
-        if g is None:
-            rlist = []
-            order = np.zeros(0, dtype=np.int64)
-            n_un = n_old = 0
-            o_sizes = np.zeros(0, dtype=np.int64)
-            regs = idxs = np.zeros(0, dtype=np.int64)
-            dups = np.zeros(0, dtype=bool)
+        if self._queue_anomaly():
+            return None
+        pop = self._pop_runs()
+        if pop is None:
+            z = np.zeros(0, dtype=np.int64)
+            q_regs, q_starts, q_cnts, q_csz, n_un_runs = z, z, z, z, 0
         else:
-            rlist, regs, idxs, stamps, szs, dups, pinq, pnow = g
-            order, anomaly = victim_order(stamps, pinq, pnow)
-            if anomaly:
-                return None
-            n_un = int((~pinq).sum())
-            n_old = len(order)
-            o_sizes = szs[order]
+            q_regs, q_starts, q_cnts, q_csz, n_un_runs = pop
         sizes = r.sizes[ids]
         n_own = len(ids)
         need_total = int(need[-1])
-        old_bytes = int(o_sizes.sum())
-        un_bytes = int(o_sizes[:n_un].sum())
+        un_bytes = self._index.un.live_bytes
+        old_bytes = un_bytes + self._index.pin.live_bytes
         if need_total <= un_bytes or (region_pinned and need_total <= old_bytes):
             # pure old-queue prefix: no own-batch chunk can be popped before
-            # the deficit is covered
+            # the deficit is covered.  Only the runs covering the deficit
+            # are ever expanded to chunks.
+            rcum = np.cumsum(q_cnts * q_csz)
+            j = int(np.searchsorted(rcum, need_total, side="left"))
+            o_regs, o_idxs, o_sizes, o_dups = self._expand_victims(
+                q_regs[:j + 1], q_starts[:j + 1], q_cnts[:j + 1],
+                q_csz[:j + 1])
             vcum = np.cumsum(o_sizes)
             m = np.where(need > 0,
                          np.searchsorted(vcum, np.maximum(need, 0),
                                          side="left") + 1,
                          0)
             M = int(m[-1])
-            sel = order[:M]
             return {
-                "rlist": rlist,
-                "old": (regs[sel], idxs[sel], o_sizes[:M], dups[sel]),
+                "rlist": self._rlist,
+                "old": (o_regs[:M], o_idxs[:M], o_sizes[:M], o_dups[:M]),
                 "own_evicted": np.zeros(0, dtype=np.int64),
-                "m": m, "v_dup": dups[sel], "v_sizes": o_sizes[:M],
+                "m": m, "v_dup": o_dups[:M], "v_sizes": o_sizes[:M],
             }
-        # exact replay of the seed's pop interleaving, O(n) integer ops.
-        # Old-queue consumption is bounded by the prefix covering the full
-        # deficit, so only that slice is materialized as Python ints.
+        # exact replay of the seed's pop interleaving at run granularity
+        # (residency.merge_pop_runs): equal-size run pairs consume each
+        # other 1-for-1 in closed form, odd-sized tail chunks step
+        # chunk-at-a-time, and only the consumed prefixes are expanded.
         free = self.device_capacity - self.device_used
-        bound = eviction_cut(o_sizes, need_total)
-        bound = n_old if bound is None else bound
-        osz = o_sizes[:bound].tolist()
-        szl = sizes.tolist()
-        vict: list[int] = []        # >= 0: old queue position; ~j: own chunk j
-        m = np.zeros(n_own, dtype=np.int64)
-        un_cur, pin_cur, own_cur = 0, n_un, 0
-        for i in range(n_own):
-            s = szl[i]
-            while free < s:
-                if un_cur < n_un:
-                    free += osz[un_cur]
-                    vict.append(un_cur)
-                    un_cur += 1
-                elif not region_pinned and own_cur < i:
-                    free += szl[own_cur]
-                    vict.append(~own_cur)
-                    own_cur += 1
-                elif pin_cur < n_old:
-                    free += osz[pin_cur]
-                    vict.append(pin_cur)
-                    pin_cur += 1
-                elif region_pinned and own_cur < i:
-                    free += szl[own_cur]
-                    vict.append(~own_cur)
-                    own_cur += 1
-                else:
-                    return None     # both queues drained: the seed raises
-            free -= s
-            m[i] = len(vict)
-        va = np.array(vict, dtype=np.int64)
-        own_mask = va < 0
-        own_idx = ~va[own_mask]
-        old_pos = va[~own_mask]
-        old_orig = order[old_pos]
-        old_dups = dups[old_orig]
-        v_sizes = np.empty(len(va), dtype=np.int64)
-        v_dup = np.empty(len(va), dtype=bool)
-        v_sizes[~own_mask] = o_sizes[old_pos]
-        v_dup[~own_mask] = old_dups
-        v_sizes[own_mask] = sizes[own_idx]
-        v_dup[own_mask] = own_dup[own_idx]
+        _, own_cnts, own_csz = chunk_runs(ids, sizes)
+        res = merge_pop_runs(
+            (own_csz, own_cnts),
+            (q_csz[:n_un_runs], q_cnts[:n_un_runs]),
+            (q_csz[n_un_runs:], q_cnts[n_un_runs:]),
+            free, region_pinned)
+        if res is None:
+            return None     # both queues drained: the seed raises
+        segments, m_segs, n_un_taken, n_pin_taken, n_own_taken = res
+        un_exp = self._expand_victims(
+            q_regs[:n_un_runs], q_starts[:n_un_runs], q_cnts[:n_un_runs],
+            q_csz[:n_un_runs], upto=n_un_taken) if n_un_taken else None
+        pin_exp = self._expand_victims(
+            q_regs[n_un_runs:], q_starts[n_un_runs:], q_cnts[n_un_runs:],
+            q_csz[n_un_runs:], upto=n_pin_taken) if n_pin_taken else None
+        exp = {"un": un_exp, "pin": pin_exp}
+        own_idx = np.arange(n_own_taken, dtype=np.int64)
+        v_sizes, v_dup = [], []
+        for src, off, cnt in segments:
+            if src == "own":
+                v_sizes.append(sizes[off:off + cnt])
+                v_dup.append(np.broadcast_to(
+                    np.asarray(own_dup, dtype=bool), (n_own,))[off:off + cnt])
+            else:
+                _, _, e_sizes, e_dups = exp[src]
+                v_sizes.append(e_sizes[off:off + cnt])
+                v_dup.append(e_dups[off:off + cnt])
+        empty = (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64),
+                 np.zeros(0, dtype=np.int64), np.zeros(0, dtype=bool))
+        u = un_exp if un_exp is not None else empty
+        p = pin_exp if pin_exp is not None else empty
         return {
-            "rlist": rlist,
-            "old": (regs[old_orig], idxs[old_orig],
-                    o_sizes[old_pos], old_dups),
+            "rlist": self._rlist,
+            "old": tuple(np.concatenate([a, b]) for a, b in zip(u, p)),
             "own_evicted": own_idx,
-            "m": m, "v_dup": v_dup, "v_sizes": v_sizes,
+            "m": expand_m_segs(m_segs, n_own),
+            "v_dup": (np.concatenate(v_dup) if v_dup
+                      else np.zeros(0, dtype=bool)),
+            "v_sizes": (np.concatenate(v_sizes) if v_sizes
+                        else np.zeros(0, dtype=np.int64)),
         }
 
     def _commit_evictions(self, r: Region, plan) -> None:
@@ -768,6 +943,7 @@ class UMSimulator:
                 self.report.dtoh_s += t
                 self.report.dtoh_bytes += int(sz.sum())
                 self.device_used -= int(sz.sum())
+                self._index_remove(r, ids)
                 r.on_device[ids] = False
                 r.duplicated[ids] = False
 
@@ -809,6 +985,8 @@ class UMSimulator:
             r.duplicated[dup_ids] = False  # write invalidates the duplicate
             gone = dup_ids[~r.on_device[dup_ids]]
             self.device_used -= int(r.sizes[gone].sum())
+            if len(gone):
+                self._index_remove(r, gone)
         dev_ids = ids[r.on_device[ids]]
         if len(dev_ids):
             sz = r.sizes[dev_ids]
@@ -835,6 +1013,7 @@ class UMSimulator:
                 self.report.n_faults += events
                 self.t_copy = max(self.t_copy, self.t_device) + stall + xfer
                 self.device_used -= total
+                self._index_remove(r, dev_ids)
                 r.on_device[dev_ids] = False
         r.populated[ids] = True
 
@@ -866,6 +1045,7 @@ class UMSimulator:
             self.report.n_faults += events
             self.t_device += stall + xfer
             self.device_used -= total
+            self._index_remove(r, sel)
             r.on_device[sel] = False
 
     def kernel(

@@ -185,8 +185,12 @@ def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
         specs = [(a, p, var.get_strategy(v) if isinstance(v, str) else v, r, g)
                  for a, p, v, r, g in specs]
         with ProcessPoolExecutor(max_workers=workers) as pool:
+            # fine-grained chunks: heavy cells cluster (one platform x
+            # regime block), so coarse chunks would serialize them onto one
+            # worker — page-mode grace-hopper cells dominate the sweep
             return list(pool.map(_run_cell_spec, specs,
-                                 chunksize=max(1, len(specs) // (workers * 4))))
+                                 chunksize=max(1, len(specs)
+                                               // (workers * 16))))
     return [_run_cell_spec(s) for s in specs]
 
 
@@ -198,6 +202,15 @@ def run_extended_matrix(workers: int | None = None,
                       regimes=EXTENDED_REGIMES,
                       variants=EXTENDED_VARIANTS,
                       granularity=granularity, workers=workers)
+
+
+def run_page_matrix(workers: int | None = None) -> list[CellResult]:
+    """The full extended matrix at 64 KB system-page granularity — the
+    regime where fault counts explode (Fig. 7c/8c) and where chunk state is
+    ~400k-1.5M pages per region on 96 GB platforms.  Routinely runnable
+    since the incremental residency index / run-coalescing rewrite
+    (DESIGN.md §9); wall time is tracked in BENCH_umbench.json."""
+    return run_extended_matrix(workers=workers, granularity="page")
 
 
 def default_workers() -> int:

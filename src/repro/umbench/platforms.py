@@ -15,7 +15,7 @@ reports near-bulk fault-driven migration and low ATS handling latency.
 """
 from __future__ import annotations
 
-from repro.core.simulator import SimPlatform
+from repro.core.simulator import GB, SimPlatform
 
 INTEL_PASCAL = SimPlatform(
     name="intel-pascal-pcie",
@@ -81,3 +81,13 @@ PLATFORMS = {
     p.name: p
     for p in (INTEL_PASCAL, INTEL_VOLTA, P9_VOLTA, GRACE_HOPPER, TPU_V5E)
 }
+
+def working_set_chunks(platform: SimPlatform, regime_frac: float,
+                       granularity: str = "group") -> int:
+    """Chunk count of a regime's working set on ``platform`` at the given
+    granularity — the sweep-scale number the page-granularity mode is sized
+    by (~400k 64 KB pages per 1.5x-oversubscribed region on a 16 GB card,
+    ~2.4M on the 96 GB superchip)."""
+    chunk = (platform.page_bytes if granularity == "page"
+             else platform.fault_group_bytes)
+    return int(regime_frac * platform.device_mem_gb * GB) // chunk

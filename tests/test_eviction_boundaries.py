@@ -1,0 +1,182 @@
+"""Eviction boundary conditions vs the seed pop loop (ISSUE 3 bugfix set).
+
+Covers, chunk-for-chunk against the seed oracle:
+
+* exact-fit cuts — ``need_free`` landing exactly on a cumsum boundary must
+  evict the boundary chunk and nothing after it;
+* empty-queue drains — nothing resident and the allocation still does not
+  fit (a chunk larger than device memory);
+* the ``cut is None`` over-drain path in ``_evict_for`` — the seed pops
+  *everything* and then raises, so the vectorized engine must account every
+  eviction before raising;
+* pinned/unpinned mixes, including the ``_evict_for_scalar`` anomaly path
+  (a region's pin advise flipped after its chunks were filed).
+
+Deterministic constructions below; the hypothesis/seeded-random scenario
+sweeps live in test_residency_index.py and OversubscriptionError raise-site
+state parity in test_oversubscription_raises.py.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection must not error (dev-only dependency)
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import seed_simulator
+from repro.core import simulator as vec
+from repro.core.advise import MemorySpace
+from repro.core.residency import eviction_cut
+from repro.core.simulator import KB, MB, SimPlatform
+
+TINY = SimPlatform("tiny", 8 / 1024.0, 12.0, 500.0, 10.0, 45.0, False, True)
+TINY_NV = SimPlatform("tiny-nv", 8 / 1024.0, 60.0, 500.0, 10.0, 20.0,
+                      True, True)
+
+
+def _pair(plat=TINY):
+    return vec.UMSimulator(plat), seed_simulator.UMSimulator(plat)
+
+
+def _assert_reports_equal(sv, ss):
+    import dataclasses
+    g = dataclasses.asdict(sv.finish())
+    w = dataclasses.asdict(ss.finish())
+    for k in ("htod_bytes", "dtoh_bytes", "remote_bytes", "n_faults",
+              "n_evictions", "n_dropped"):
+        assert int(g[k]) == int(w[k]), k
+    for k in ("compute_s", "fault_stall_s", "htod_s", "dtoh_s", "remote_s",
+              "total_s"):
+        assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), k
+    assert sv.device_used == ss.device_used
+
+
+# ---------------------------------------------------------------------------
+# eviction_cut: the cumsum-boundary arithmetic itself
+# ---------------------------------------------------------------------------
+
+def test_eviction_cut_exact_boundary():
+    sizes = np.array([4, 4, 4], dtype=np.int64)
+    assert eviction_cut(sizes, 4) == 1      # exactly the first chunk
+    assert eviction_cut(sizes, 8) == 2      # exactly two — not three
+    assert eviction_cut(sizes, 12) == 3
+    assert eviction_cut(sizes, 5) == 2      # one byte over a boundary
+    assert eviction_cut(sizes, 13) is None  # over-drain
+    assert eviction_cut(sizes, 0) == 0
+    assert eviction_cut(sizes, -3) == 0
+    assert eviction_cut(np.zeros(0, dtype=np.int64), 1) is None
+
+
+@settings(max_examples=200, deadline=None)
+@given(sizes=st.lists(st.integers(1, 64), min_size=0, max_size=24),
+       need=st.integers(-8, 1600))
+def test_eviction_cut_matches_pop_loop(sizes, need):
+    """eviction_cut == the seed's literal while-loop pop count."""
+    arr = np.array(sizes, dtype=np.int64)
+    got = eviction_cut(arr, need)
+    freed, pops = 0, 0
+    for s in sizes:
+        if freed >= need:
+            break
+        freed += s
+        pops += 1
+    want = pops if (freed >= need or need <= 0) else None
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# engine-level boundary parity
+# ---------------------------------------------------------------------------
+
+def test_exact_fit_eviction_boundary():
+    """Working set sized so every eviction deficit lands exactly on a chunk
+    boundary: the vectorized cut must stop at the boundary chunk, matching
+    the seed's pop loop (one extra eviction would skew n_evictions)."""
+    sv, ss = _pair()
+    for sim in (sv, ss):
+        sim.alloc("a", 6 * MB)          # 3 chunks, fills 6 of 8 MB
+        sim.alloc("b", 4 * MB)          # chunk 0 fits exactly; chunk 1's
+        sim.host_write("a")             # deficit is exactly one chunk
+        sim.host_write("b")
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[])
+        sim.kernel("k", flops=1.0, reads=["b"], writes=[])
+    assert sv.report.n_evictions == ss.report.n_evictions == 1
+    assert sv.residency_snapshot() == ss.residency_snapshot()
+    _assert_reports_equal(sv, ss)
+
+
+def test_exact_fit_with_odd_tail_chunk():
+    """Tail chunks (region size not a chunk multiple) make the cut land
+    mid-run: the boundary run must split at the right chunk."""
+    sv, ss = _pair()
+    for sim in (sv, ss):
+        sim.alloc("a", 5 * MB + 64 * KB)     # chunks 2,2,1.0625 MB
+        sim.alloc("b", 4 * MB + 512)
+        sim.host_write("a")
+        sim.host_write("b")
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[])
+        sim.kernel("k", flops=1.0, reads=["b"], writes=[])
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[])
+    _assert_reports_equal(sv, ss)
+    assert sv.residency_snapshot() == ss.residency_snapshot()
+
+
+def test_pinned_unpinned_mix_last_resort_order():
+    """Pinned chunks are evicted only after every unpinned chunk, in stamp
+    order, and the counts match the seed exactly."""
+    sv, ss = _pair()
+    for sim in (sv, ss):
+        sim.alloc("pinned", 4 * MB)
+        sim.advise_preferred_location("pinned", MemorySpace.DEVICE)
+        sim.alloc("plain", 4 * MB)
+        sim.host_write("pinned")
+        sim.host_write("plain")
+        sim.kernel("k", flops=1.0, reads=["pinned", "plain"], writes=[])
+        sim.alloc("big", 7 * MB)
+        sim.advise_preferred_location("big", MemorySpace.DEVICE)
+        sim.host_write("big")
+        sim.kernel("k", flops=1.0, reads=["big"], writes=[])
+    # the 7 MB pinned insert consumes both unpinned chunks AND dips into
+    # the pinned queue (last resort) before its own chunks
+    assert sv.report.n_evictions == ss.report.n_evictions == 4
+    _assert_reports_equal(sv, ss)
+    assert sv.residency_snapshot() == ss.residency_snapshot()
+
+
+def test_scalar_anomaly_path_reclassification():
+    """Flipping a region's pin advise after its chunks were filed forces the
+    seed's lazy pop-time reclassification; the vectorized engine must detect
+    the anomaly (O(regions) counters) and take the scalar path with
+    identical results."""
+    sv, ss = _pair(TINY_NV)
+    for sim in (sv, ss):
+        sim.alloc("a", 4 * MB)
+        sim.host_write("a")
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[])   # filed unpinned
+        sim.advise_preferred_location("a", MemorySpace.DEVICE)  # now pinned
+        sim.alloc("b", 6 * MB)
+        sim.host_write("b")
+        sim.kernel("k", flops=1.0, reads=["b"], writes=[])   # needs eviction
+    _assert_reports_equal(sv, ss)
+    assert sv.residency_snapshot() == ss.residency_snapshot()
+
+
+def test_unpin_anomaly_path():
+    """The reverse flip: pinned-filed chunks whose region was un-pinned move
+    back to the unpinned queue at pop time."""
+    sv, ss = _pair(TINY_NV)
+    for sim in (sv, ss):
+        sim.alloc("a", 4 * MB)
+        sim.advise_preferred_location("a", MemorySpace.DEVICE)
+        sim.host_write("a")
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[])   # filed pinned
+        sim.advise_preferred_location("a", MemorySpace.HOST)  # un-pinned
+        sim.alloc("b", 6 * MB)
+        sim.advise_preferred_location("b", MemorySpace.DEVICE)
+        sim.host_write("b")
+        # b is pinned, so eviction starts from the pinned queue where a's
+        # chunks sit misfiled -> pop-time refile back to the unpinned queue
+        sim.kernel("k", flops=1.0, reads=["b"], writes=[])
+    _assert_reports_equal(sv, ss)
+    assert sv.residency_snapshot() == ss.residency_snapshot()

@@ -1,0 +1,133 @@
+"""OversubscriptionError raise-site parity (ISSUE 3 satellite).
+
+Each raise site must leave the vectorized simulator's counters in exactly
+the seed's drained state at raise time:
+
+* explicit-variant allocation (``explicit_alloc`` / ``explicit_copy_to_device``)
+  — raises *before* any transfer, so counters are untouched;
+* the vectorized ``cut is None`` over-drain in ``_evict_for`` — the seed
+  pops every resident chunk (accounting each eviction) and *then* raises;
+* the scalar drain (``_evict_for_scalar`` under a pin-flip anomaly) —
+  same drained state through the pop-by-pop path.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import seed_simulator
+from repro.core import simulator as vec
+from repro.core.advise import MemorySpace
+from repro.core.simulator import (
+    GB,
+    KB,
+    MB,
+    OversubscriptionError,
+    SimPlatform,
+)
+
+# 1 MB device: a single 2 MB fault group cannot ever fit
+MICRO = SimPlatform("micro", 1 / 1024.0, 12.0, 500.0, 10.0, 45.0, False, True)
+TINY = SimPlatform("tiny", 8 / 1024.0, 12.0, 500.0, 10.0, 45.0, False, True)
+
+
+def _assert_state_equal(sv, ss):
+    g = dataclasses.asdict(sv.report)
+    w = dataclasses.asdict(ss.report)
+    for k in ("htod_bytes", "dtoh_bytes", "remote_bytes", "n_faults",
+              "n_evictions", "n_dropped"):
+        assert int(g[k]) == int(w[k]), k
+    for k in ("compute_s", "fault_stall_s", "htod_s", "dtoh_s", "remote_s"):
+        assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), k
+    assert sv.device_used == ss.device_used
+    assert abs(sv.t_device - ss.t_device) <= 1e-9 * max(1.0, ss.t_device)
+
+
+def _run_both(build):
+    sv = vec.UMSimulator(TINY)
+    ss = seed_simulator.UMSimulator(TINY)
+    errs = []
+    for sim in (sv, ss):
+        with pytest.raises(OversubscriptionError) as ei:
+            build(sim)
+        errs.append(ei.value)
+    return sv, ss, errs
+
+
+def test_explicit_alloc_raise_leaves_counters_untouched():
+    def build(sim):
+        sim.alloc("a", 6 * MB)
+        sim.host_write("a")
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[])
+        sim.alloc("w", 4 * MB)
+        sim.explicit_alloc("w")     # 6 + 4 > 8 -> raises, no state change
+
+    sv, ss, _ = _run_both(build)
+    _assert_state_equal(sv, ss)
+    assert sv.report.n_evictions == 0
+    assert sv.device_used == 6 * MB     # nothing was allocated or evicted
+
+
+def test_explicit_copy_raise_leaves_counters_untouched():
+    def build(sim):
+        sim.alloc("a", int(1.5 * TINY.device_mem_gb * GB))
+        sim.host_write("a")
+        sim.explicit_copy_to_device("a")
+
+    sv, ss, _ = _run_both(build)
+    _assert_state_equal(sv, ss)
+    assert sv.report.htod_bytes == 0
+
+
+def test_vectorized_cut_none_drains_everything_then_raises():
+    """A fault group larger than what evicting *all* residents can free:
+    the seed empties both queues (accounting every eviction) before
+    raising — the vectorized over-drain must account identically."""
+    sv = vec.UMSimulator(MICRO)
+    ss = seed_simulator.UMSimulator(MICRO)
+    for sim in (sv, ss):
+        sim.alloc("small", 512 * KB)     # one sub-capacity chunk, resident
+        sim.host_write("small")
+        sim.kernel("k", flops=1.0, reads=["small"], writes=[])
+        assert sim.device_used == 512 * KB
+        sim.alloc("big", 2 * MB)         # one chunk, > device memory
+        sim.host_write("big")
+        with pytest.raises(OversubscriptionError):
+            sim.kernel("k", flops=1.0, reads=["big"], writes=[])
+    _assert_state_equal(sv, ss)
+    # the drain really happened: the resident chunk was evicted first
+    assert sv.report.n_evictions == 1
+    assert sv.device_used == 0
+    assert sv.residency_snapshot() == []
+
+
+def test_empty_queue_drain_raises_immediately():
+    """Nothing resident at all: the raise carries no eviction accounting."""
+    sv = vec.UMSimulator(MICRO)
+    ss = seed_simulator.UMSimulator(MICRO)
+    for sim in (sv, ss):
+        sim.alloc("big", 2 * MB)
+        sim.host_write("big")
+        with pytest.raises(OversubscriptionError):
+            sim.kernel("k", flops=1.0, reads=["big"], writes=[])
+    _assert_state_equal(sv, ss)
+    assert sv.report.n_evictions == 0
+
+
+def test_scalar_drain_raise_after_anomaly():
+    """Pin-flip anomaly forces the scalar pop loop, which must drain every
+    reclassified chunk and leave the seed's exact state at raise."""
+    sv = vec.UMSimulator(MICRO)
+    ss = seed_simulator.UMSimulator(MICRO)
+    for sim in (sv, ss):
+        sim.alloc("small", 512 * KB)
+        sim.host_write("small")
+        sim.kernel("k", flops=1.0, reads=["small"], writes=[])
+        # flip the advise so 'small' sits misfiled in the unpinned queue
+        sim.advise_preferred_location("small", MemorySpace.DEVICE)
+        sim.alloc("big", 2 * MB)
+        sim.host_write("big")
+        with pytest.raises(OversubscriptionError):
+            sim.kernel("k", flops=1.0, reads=["big"], writes=[])
+    _assert_state_equal(sv, ss)
+    assert sv.report.n_evictions == 1   # the reclassified chunk was drained
+    assert sv.device_used == 0

@@ -1,0 +1,338 @@
+"""The incremental residency index (DESIGN.md §9) against its oracles.
+
+Three layers:
+
+* ``merge_pop_runs`` (the O(runs) replay of the seed's interleaved
+  insert/pop loop) against ``merge_pop_chunks`` (the per-chunk reference —
+  the pre-index implementation) on randomized run configurations;
+* the index's materialized pop order (``residency_snapshot``) against the
+  seed simulator's literal OrderedDict contents after every operation of a
+  randomized scenario;
+* the index's internal invariants (``_debug_validate``): entry pointers,
+  per-region queue counters, and live-byte accounting stay consistent with
+  per-chunk state through inserts, touches, evictions, and host I/O.
+
+Runs with or without hypothesis: the seeded-random scenario tests always
+execute; hypothesis variants deepen the search when the dev extra is
+installed.
+"""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection must not error (dev-only dependency)
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import seed_simulator
+from repro.core import simulator as vec
+from repro.core.residency import (
+    expand_m_segs,
+    merge_pop_chunks,
+    merge_pop_runs,
+)
+from repro.core.simulator import MB, OversubscriptionError, SimPlatform
+from repro.core.advise import Accessor, MemorySpace
+
+PCIE = SimPlatform("pcie", 0.125, 12.0, 500.0, 10.0, 45.0, False, True,
+                   fault_migration_efficiency=0.35)
+NVLINK = SimPlatform("nvlink", 0.125, 60.0, 500.0, 10.0, 20.0, True, True,
+                     fault_migration_efficiency=0.85)
+
+
+# ---------------------------------------------------------------------------
+# merge_pop_runs vs the chunk-level reference
+# ---------------------------------------------------------------------------
+
+def _runs_to_chunks(runs):
+    csizes, counts = runs
+    out = []
+    for c, n in zip(csizes, counts):
+        out.extend([int(c)] * int(n))
+    return out
+
+
+def _check_merge_equiv(own_runs, un_runs, pin_runs, free, region_pinned):
+    own_sizes = _runs_to_chunks(own_runs)
+    un_sizes = _runs_to_chunks(un_runs)
+    pin_sizes = _runs_to_chunks(pin_runs)
+    ref = merge_pop_chunks(own_sizes, un_sizes, pin_sizes, free,
+                           region_pinned)
+    got = merge_pop_runs(own_runs, un_runs, pin_runs, free, region_pinned)
+    assert (ref is None) == (got is None)
+    if ref is None:
+        return
+    vict, m_ref = ref
+    segments, m_segs, n_un, n_pin, n_own = got
+    assert np.array_equal(m_ref, expand_m_segs(m_segs, len(own_sizes)))
+    n_un_chunks = len(un_sizes)
+    assert n_un == int(((vict >= 0) & (vict < n_un_chunks)).sum())
+    assert n_pin == int((vict >= n_un_chunks).sum())
+    assert n_own == int((vict < 0).sum())
+    # the segment sequence must replay the victim sequence exactly
+    flat = []
+    for src, off, cnt in segments:
+        if src == "un":
+            flat.extend(range(off, off + cnt))
+        elif src == "pin":
+            flat.extend(range(n_un_chunks + off, n_un_chunks + off + cnt))
+        else:
+            flat.extend(~np.arange(off, off + cnt))
+    assert np.array_equal(np.array(flat, dtype=np.int64), vict)
+
+
+def _random_runs(rng, max_runs=4, max_count=12):
+    n = rng.randint(0, max_runs)
+    sizes = [rng.choice([3, 5, 8]) for _ in range(n)]
+    counts = [rng.randint(1, max_count) for _ in range(n)]
+    return (np.array(sizes, dtype=np.int64), np.array(counts, dtype=np.int64))
+
+
+@pytest.mark.parametrize("seed", range(200))
+def test_merge_runs_matches_chunk_reference_random(seed):
+    rng = random.Random(seed)
+    own = _random_runs(rng)
+    if not len(own[0]):
+        own = (np.array([4], dtype=np.int64), np.array([3], dtype=np.int64))
+    un = _random_runs(rng)
+    pin = _random_runs(rng)
+    free = rng.randint(0, 40)
+    _check_merge_equiv(own, un, pin, free, rng.random() < 0.5)
+
+
+def test_merge_runs_uniform_thrash():
+    """The dominant page-mode shape: one giant uniform own run self-evicting
+    with empty old queues — must produce O(1) segments, not O(n)."""
+    own = (np.array([4], dtype=np.int64), np.array([100000], dtype=np.int64))
+    got = merge_pop_runs(own, (np.zeros(0, np.int64), np.zeros(0, np.int64)),
+                         (np.zeros(0, np.int64), np.zeros(0, np.int64)),
+                         free=12, region_pinned=False)
+    assert got is not None
+    segments, m_segs, n_un, n_pin, n_own = got
+    assert n_un == n_pin == 0
+    assert len(segments) <= 4 and len(m_segs) <= 4
+    _check_merge_equiv(own, (np.zeros(0, np.int64), np.zeros(0, np.int64)),
+                       (np.zeros(0, np.int64), np.zeros(0, np.int64)),
+                       12, False)
+
+
+def test_merge_runs_drained_returns_none():
+    own = (np.array([8], dtype=np.int64), np.array([2], dtype=np.int64))
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.int64))
+    # free 0, first insert: no un, no own yet (gap 0), no pin -> seed raises
+    assert merge_pop_runs(own, empty, empty, 0, False) is None
+    assert merge_pop_runs(own, empty, empty, 0, True) is None
+
+
+def test_merge_runs_pin_then_own_priority():
+    """An unpinned region pops the pinned queue only while it has no own
+    chunks inserted; from the second insert on, own chunks outrank pin."""
+    own = (np.array([4], dtype=np.int64), np.array([10], dtype=np.int64))
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.int64))
+    pin = (np.array([4], dtype=np.int64), np.array([50], dtype=np.int64))
+    _check_merge_equiv(own, empty, pin, 0, False)
+    got = merge_pop_runs(own, empty, pin, 0, False)
+    segments, _, n_un, n_pin, n_own = got
+    assert n_pin == 1 and n_own == 9          # one pin pop, then self-thrash
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    own=st.lists(st.tuples(st.integers(1, 9), st.integers(1, 15)),
+                 min_size=1, max_size=4),
+    un=st.lists(st.tuples(st.integers(1, 9), st.integers(1, 15)),
+                max_size=4),
+    pin=st.lists(st.tuples(st.integers(1, 9), st.integers(1, 15)),
+                 max_size=4),
+    free=st.integers(0, 60),
+    pinned=st.booleans(),
+)
+def test_merge_runs_matches_chunk_reference_hypothesis(own, un, pin, free,
+                                                       pinned):
+    def pack(rs):
+        return (np.array([s for s, _ in rs], dtype=np.int64),
+                np.array([c for _, c in rs], dtype=np.int64))
+    _check_merge_equiv(pack(own), pack(un), pack(pin), free, pinned)
+
+
+# ---------------------------------------------------------------------------
+# index pop order vs the seed's literal queues, through random scenarios
+# ---------------------------------------------------------------------------
+
+def _seed_snapshot(sim: seed_simulator.UMSimulator):
+    return sim.residency_snapshot()
+
+
+def _random_scenario(rng: random.Random, coherent: bool):
+    """A random op trace over a few small regions, exercising inserts,
+    touches, partial host I/O, advises (incl. pin flips -> anomaly paths),
+    prefetches and evictions."""
+    plat = NVLINK if coherent else PCIE
+    ops = []
+    names = []
+    for i in range(rng.randint(2, 4)):
+        nm = f"r{i}"
+        names.append(nm)
+        size = rng.randint(3, 40) * MB + rng.choice([0, 1, 517])
+        ops.append(("alloc", nm, size))
+        if rng.random() < 0.8:
+            ops.append(("host_write", nm, None))
+    for _ in range(rng.randint(2, 10)):
+        k = rng.random()
+        nm = rng.choice(names)
+        if k < 0.35:
+            sub = rng.sample(names, rng.randint(1, len(names)))
+            ops.append(("kernel", tuple(sub),
+                        tuple(n for n in sub if rng.random() < 0.3)))
+        elif k < 0.5:
+            ops.append(("advise_pin", nm,
+                        rng.choice([MemorySpace.DEVICE, MemorySpace.HOST])))
+        elif k < 0.6:
+            ops.append(("read_mostly", nm))
+        elif k < 0.7:
+            ops.append(("accessed_by", nm,
+                        rng.choice([Accessor.HOST, Accessor.DEVICE])))
+        elif k < 0.8:
+            ops.append(("prefetch", nm,
+                        rng.choice([MemorySpace.DEVICE, MemorySpace.HOST])))
+        elif k < 0.9:
+            ops.append(("host_write", nm, rng.randint(1, 20) * MB))
+        else:
+            ops.append(("host_read", nm, rng.randint(1, 20) * MB))
+    return plat, ops
+
+
+def _apply(sim, op):
+    kind = op[0]
+    if kind == "alloc":
+        sim.alloc(op[1], op[2])
+    elif kind == "host_write":
+        sim.host_write(op[1], op[2])
+    elif kind == "host_read":
+        sim.host_read(op[1], op[2])
+    elif kind == "kernel":
+        sim.kernel("k", flops=1e6, reads=list(op[1]), writes=list(op[2]))
+    elif kind == "advise_pin":
+        sim.advise_preferred_location(op[1], op[2])
+    elif kind == "read_mostly":
+        sim.advise_read_mostly(op[1])
+    elif kind == "accessed_by":
+        sim.advise_accessed_by(op[1], op[2])
+    elif kind == "prefetch":
+        sim.prefetch(op[1], op[2])
+
+
+@pytest.mark.parametrize("seed", range(120))
+def test_index_pop_order_tracks_seed_queues(seed):
+    """After every op of a random trace, the vectorized engine's
+    residency_snapshot equals the seed's literal queue contents, and the
+    index invariants hold."""
+    rng = random.Random(seed)
+    plat, ops = _random_scenario(rng, coherent=seed % 2 == 0)
+    sv = vec.UMSimulator(plat)
+    ss = seed_simulator.UMSimulator(plat)
+    for op in ops:
+        err_v = err_s = None
+        try:
+            _apply(sv, op)
+        except OversubscriptionError as e:
+            err_v = e
+        try:
+            _apply(ss, op)
+        except OversubscriptionError as e:
+            err_s = e
+        assert (err_v is None) == (err_s is None), op
+        sv._debug_validate()
+        assert sv.residency_snapshot() == _seed_snapshot(ss), op
+        assert sv.device_used == ss.device_used, op
+        if err_v is not None:
+            break
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_index_counters_track_seed_through_scenarios(seed):
+    """Full-report parity on random traces (counter-exact, 1e-9 times)."""
+    import dataclasses
+    rng = random.Random(1000 + seed)
+    plat, ops = _random_scenario(rng, coherent=seed % 2 == 1)
+    sv = vec.UMSimulator(plat)
+    ss = seed_simulator.UMSimulator(plat)
+    raised = False
+    for op in ops:
+        err_v = err_s = None
+        try:
+            _apply(sv, op)
+        except OversubscriptionError as e:
+            err_v = e
+        try:
+            _apply(ss, op)
+        except OversubscriptionError as e:
+            err_s = e
+        assert (err_v is None) == (err_s is None), op
+        if err_v is not None:
+            raised = True
+            break
+    g = dataclasses.asdict(sv.finish())
+    w = dataclasses.asdict(ss.finish())
+    for k in ("htod_bytes", "dtoh_bytes", "remote_bytes", "n_faults",
+              "n_evictions", "n_dropped"):
+        assert int(g[k]) == int(w[k]), (k, raised)
+    for k in ("compute_s", "fault_stall_s", "htod_s", "dtoh_s", "remote_s",
+              "total_s"):
+        assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), k
+
+
+def test_wrapped_partial_touch_reorders_tail_entry():
+    """A partial kernel whose rotating cursor sits mid-entry touches the
+    whole (tail) entry in wrapped order [c..n) + [0..c): the seed's
+    move_to_end sequence reorders the queue, so the tail-entry touch skip
+    must NOT fire — a skipped re-file would evict the wrong chunks later
+    (regression: the skip once checked membership+count but not order)."""
+    P = SimPlatform("t8", 8 / 1024.0, 12.0, 500.0, 10.0, 45.0, False, True)
+    def run(engine):
+        import dataclasses
+        sim = engine.UMSimulator(P)
+        sim.alloc("a", 6 * MB)           # 3 uniform chunks -> one run entry
+        sim.host_write("a")
+        # advance a's cursor to 1 (faults chunk 0 only)
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[], partial={"a": 0.34})
+        sim.alloc("b", 8 * MB)
+        sim.host_write("b")
+        sim.kernel("k", flops=1.0, reads=["b"], writes=[])   # evicts a
+        # refault ALL of a in one ascending batch -> one entry, cursor still 1
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[])
+        # wrapped full touch [1,2,0] of the single tail entry: the pop
+        # order must become [.., a1, a2, a0] immediately
+        sim.kernel("k", flops=1.0, reads=["a"], writes=[], partial={"a": 1.0})
+        snap = sim.residency_snapshot()
+        sim.kernel("k", flops=1.0, reads=["b"], writes=[])
+        return snap, sim.residency_snapshot(), dataclasses.asdict(sim.finish())
+    vsnap, vend, vrep = run(vec)
+    ssnap, send, srep = run(seed_simulator)
+    assert vsnap == ssnap
+    assert vsnap[-3:] == [("a", 1), ("a", 2), ("a", 0)]
+    assert vend == send
+    for k in ("htod_bytes", "dtoh_bytes", "n_faults", "n_evictions"):
+        assert int(vrep[k]) == int(srep[k]), k
+
+
+def test_compaction_preserves_order():
+    """Force many touch cycles so dead entries accumulate and the queue
+    compacts, then check the pop order still matches the seed."""
+    sv = vec.UMSimulator(PCIE)
+    ss = seed_simulator.UMSimulator(PCIE)
+    for sim in (sv, ss):
+        sim.alloc("a", 20 * MB)
+        sim.alloc("b", 20 * MB)
+        sim.host_write("a")
+        sim.host_write("b")
+    for i in range(200):
+        nm = ("a", "b")[i % 2]
+        for sim in (sv, ss):
+            sim.kernel("k", flops=1.0, reads=[nm], writes=[])
+    sv._debug_validate()
+    assert sv.residency_snapshot() == _seed_snapshot(ss)
+    # entry storage stayed bounded (compaction actually ran)
+    assert sv._index.un.tail - sv._index.un.head <= 64
