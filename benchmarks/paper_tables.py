@@ -4,7 +4,8 @@ Fig. 3  in-memory GPU-kernel time per app x platform x variant
 Fig. 6  oversubscribed GPU-kernel time (explicit = N/A)
 Fig. 4/7 breakdowns (compute / fault stall / HtoD / DtoH) for traced apps
 Tab. I  working-set sizes per regime
-ext     the extended sweep: grace-hopper-c2c platform + 200 % regime
+ext     the extended sweep: grace-hopper-c2c platform + 200 % regime + the
+        beyond-paper variant tiers, with hot/cold working-set columns
 
 All cells run through the calibrated UM simulator (core/simulator.py);
 numeric correctness of each app's real JAX implementation is covered by
@@ -42,7 +43,8 @@ LAST_SWEEP_WORKERS: int | None = None
 def matrix_cells(extended: bool = False,
                  workers: int | None = None) -> list[CellResult]:
     """The (memoized) matrix sweep; ``extended`` adds grace-hopper-c2c, the
-    200 % regime, and the svm_remote variant on top of the seed 240 cells,
+    200 % regime, and the beyond-paper variant tiers (svm_remote,
+    um_hybrid_counters, um_pinned_zero_copy) on top of the seed 240 cells,
     fanned over ``workers`` processes (default: one per core)."""
     global _MATRIX, _EXTENDED, LAST_SWEEP_WORKERS
     if extended:
@@ -145,21 +147,36 @@ def table_claims_summary() -> list[str]:
 
 def table_extended_sweep() -> list[str]:
     """Beyond-paper cells: grace-hopper-c2c across regimes, the 200 % stress
-    regime on every platform, and the svm_remote always-coherent tier
-    everywhere it exists (speedup vs basic UM per cell; N/A on platforms
-    without coherent remote access)."""
+    regime on every platform, and the three beyond-paper tiers (svm_remote,
+    um_hybrid_counters, um_pinned_zero_copy) everywhere they exist (speedup
+    vs basic UM per cell; N/A where the platform gate fails).  The trailing
+    hot/cold columns split each cell's *cumulative traffic* by mechanism —
+    ``hot_gb`` is counter-promoted migration traffic, ``cold_gb`` bytes
+    accessed remotely.  They are not a disjoint working-set partition: a
+    hybrid chunk's pre-promotion touches land in cold_gb and the chunk in
+    hot_gb too, and under eviction ping-pong re-promotions count again.
+    The hybrid's counter threshold is still visible: um migrates
+    everything (0/0, with faults instead), svm_remote/um_pinned_zero_copy
+    keep all traffic cold, and the hybrid splits by touch count."""
     cells = matrix_cells(extended=True)
     sp = speedup_vs_um(cells)
-    rows = ["table,app,platform,regime,variant,total_s,speedup_vs_um"]
+    rows = ["table,app,platform,regime,variant,total_s,speedup_vs_um,"
+            "hot_gb,cold_gb"]
     for c in cells:
         if (c.platform != "grace-hopper-c2c"
                 and c.regime != "oversubscribed_2x"
-                and c.variant != "svm_remote"):
+                and c.variant in VARIANTS):
             continue
         t = "NA" if c.total_s is None else f"{c.total_s:.4f}"
         s = sp.get((c.app, c.platform, c.regime, c.variant))
         s = "NA" if s is None else f"{s:.2f}"
-        rows.append(f"ext,{c.app},{c.platform},{c.regime},{c.variant},{t},{s}")
+        if c.report is None:
+            hot = cold = "NA"
+        else:
+            hot = f"{c.report.promoted_bytes / GB:.3f}"
+            cold = f"{c.report.remote_bytes / GB:.3f}"
+        rows.append(f"ext,{c.app},{c.platform},{c.regime},{c.variant},{t},{s},"
+                    f"{hot},{cold}")
     return rows
 
 

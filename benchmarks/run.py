@@ -35,6 +35,12 @@ SEED_BASELINE_MATRIX_240_S = 58.8
 BENCH_PATH = "BENCH_umbench.json"
 
 
+# the cell-identity axes, in key order; new_axis_values labels fresh axis
+# values by these names, so _cell_key derives its tuple from the same list
+_KEY_FIELDS = ("app", "platform", "variant", "regime", "granularity")
+_KEY_DEFAULTS = {"granularity": "group"}   # absent pre-page-mode artifacts
+
+
 def _cell_key(row) -> tuple | None:
     """Matching key for a benchmark cell row, or None when the row cannot
     carry one (a malformed/pre-PR-1-schema artifact row — e.g. a plain
@@ -43,8 +49,8 @@ def _cell_key(row) -> tuple | None:
     if not isinstance(row, dict):
         return None
     try:
-        key = (row["app"], row["platform"], row["variant"], row["regime"],
-               row.get("granularity", "group"))
+        key = tuple(row.get(f, _KEY_DEFAULTS[f]) if f in _KEY_DEFAULTS
+                    else row[f] for f in _KEY_FIELDS)
         hash(key)       # unhashable field values (e.g. lists) -> unmatchable
     except (KeyError, TypeError):
         return None
@@ -55,10 +61,15 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
     """Per-cell simulated-total deltas vs the previous artifact.  Cells are
     matched on (app, platform, variant, regime, granularity); only changed
     cells are listed (sorted by |delta|, worst first) so an unchanged sweep
-    produces an empty list, not 240 zeros.  Prior-artifact rows without a
-    usable key (older schema) are unmatchable: they count as removed, and
-    current cells they would have matched count as new — the diff degrades
-    instead of raising."""
+    produces an empty list, not 240 zeros.  Cells this PR *added* to the
+    matrix are labelled, not diffed: ``new_axis_values`` names the axis
+    values (new variants, platforms, granularities, ...) the predecessor
+    never swept, so a grown matrix reads as "N new cells from these axes"
+    instead of folding into the changed-cell percentages — only cells
+    present in both artifacts can appear under ``changed``.  Prior-artifact
+    rows without a usable key (older schema) are unmatchable: they count as
+    removed, and current cells they would have matched count as new — the
+    diff degrades instead of raising."""
     prev = {}
     for r in prev_cells:
         key = _cell_key(r)
@@ -66,6 +77,13 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
             prev[key] = r.get("total_s")
     unmatchable_prev = len(prev_cells) - len(prev)
     cur_keys = {k for k in (_cell_key(r) for r in cells) if k is not None}
+    # axis values swept now but never by the predecessor — the newly added
+    # variants/columns whose cells are "new", never "changed"
+    new_axis_values = {}
+    for i, field in enumerate(_KEY_FIELDS):
+        fresh = sorted({k[i] for k in cur_keys} - {k[i] for k in prev})
+        if fresh:
+            new_axis_values[field] = fresh
     changed = []
     compared = 0
     for row in cells:
@@ -86,6 +104,7 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
         "cells_compared": compared,
         "cells_changed": len(changed),
         "cells_new": len(cells) - compared,
+        "new_axis_values": new_axis_values,
         # cells the predecessor had but this sweep lost — a non-zero count
         # means matrix coverage shrank, not that performance held
         "cells_removed": len(set(prev) - cur_keys) + unmatchable_prev,

@@ -1,11 +1,18 @@
 """Tour of the three advises x two platform classes — reproduces the
-paper's central cross-platform asymmetry in ~30 lines of API.
+paper's central cross-platform asymmetry in ~30 lines of API — then of the
+remote-tier family on grace-hopper-c2c: as the hot (re-read every pass)
+share of the working set grows, migrate-everything (um) overtakes
+remote-everything (svm_remote / um_pinned_zero_copy), and the
+access-counter hybrid tracks the better of the two by promoting exactly
+the chunks that prove hot.
 
     PYTHONPATH=src python examples/um_advise_tour.py
 """
 from repro.core import GB, MB, UMSimulator
 from repro.core.advise import Accessor, MemorySpace
-from repro.umbench.platforms import INTEL_VOLTA, P9_VOLTA
+from repro.umbench.platforms import GRACE_HOPPER, INTEL_VOLTA, P9_VOLTA
+from repro.umbench.variants import get_strategy
+from repro.umbench.workload import WorkloadBuilder
 
 SIZE = int(12 * GB)
 
@@ -27,6 +34,29 @@ def run(platform, policy: str, oversub: bool):
     return sim.finish().total_s
 
 
+def hotcold_workload(total: int, hot_frac: float, iters: int = 6):
+    """A working set with an explicitly split temperature: the hot region
+    is re-read on every pass, the cold region is streamed through exactly
+    once across all passes (a rotating 1/iters slice per kernel)."""
+    hot = max(int(total * hot_frac), 64 * MB)
+    cold = max(total - hot, 64 * MB)
+    w = WorkloadBuilder("hotcold")
+    w.alloc("hot", hot, role="input").host_write("hot")
+    w.alloc("cold", cold, role="input").host_write("cold")
+    w.alloc("out", 64 * MB, role="output")
+    for i in range(iters):
+        w.kernel(f"pass{i}", flops=1e12, reads=("hot", "cold"),
+                 writes=("out",), partial={"cold": 1.0 / iters})
+    w.readback("out")
+    return w.build()
+
+
+def run_tier(workload, variant: str) -> float:
+    sim = UMSimulator(GRACE_HOPPER)
+    get_strategy(variant).lower(workload, sim)
+    return sim.finish().total_s
+
+
 for oversub in (False, True):
     regime = "oversubscribed" if oversub else "in-memory   "
     print(f"--- {regime} ---")
@@ -36,3 +66,20 @@ for oversub in (False, True):
             t = run(platform, policy, oversub)
             print(f"  {platform.name:18s} {policy:22s} "
                   f"{base / t:5.2f}x vs basic UM")
+
+TIERS = ("um", "svm_remote", "um_pinned_zero_copy", "um_hybrid_counters")
+TOTAL = int(0.8 * GRACE_HOPPER.device_mem_gb * GB)   # in-memory regime
+
+print(f"\n--- remote-tier family on {GRACE_HOPPER.name} "
+      f"(total_s as the hot working set grows) ---")
+print("  hot_frac  " + "".join(f"{v:>21s}" for v in TIERS))
+for hot_frac in (0.05, 0.25, 0.50, 0.75, 0.95):
+    wl = hotcold_workload(TOTAL, hot_frac)
+    times = {v: run_tier(wl, v) for v in TIERS}
+    best = min(times, key=times.get)
+    cells = "".join(
+        f"{times[v]:>20.3f}{'*' if v == best else ' '}" for v in TIERS)
+    print(f"  {hot_frac:8.2f}{cells}")
+print("  (* = fastest; um wins once the hot share dominates, the remote"
+      "\n   tiers win while it is small, and the counter hybrid migrates"
+      "\n   only what crossed its touch threshold, tracking the winner)")

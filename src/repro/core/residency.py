@@ -1,8 +1,10 @@
 """ResidencyPlanner — oversubscription management (paper §II-D), planned —
 plus the array-backed residency-order primitives the vectorized UM simulator
-uses for LRU victim selection (DESIGN.md §Simulator internals), and the
+uses for LRU victim selection (DESIGN.md §Simulator internals), the
 incrementally maintained, run-coalesced residency index (DESIGN.md §9) that
-replaced the per-eviction ``_gather_resident`` rebuild.
+replaced the per-eviction ``_gather_resident`` rebuild, and the per-chunk
+access-counter split (DESIGN.md §10) behind the Grace-Hopper-style
+remote-access-first hybrid tier.
 
 CUDA UM reacts to memory pressure with page faults + LRU eviction.  A TPU
 runtime cannot fault, so the planner decides residency *ahead of time*: given
@@ -24,6 +26,7 @@ EXPERIMENTS.md per cell.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -324,6 +327,30 @@ def expand_runs(starts: np.ndarray, cnts: np.ndarray):
     ends = np.cumsum(cnts)
     within = np.arange(total, dtype=np.int64) - np.repeat(ends - cnts, cnts)
     return np.repeat(starts, cnts) + within
+
+
+def counter_promote_split(ids: np.ndarray, counts: np.ndarray,
+                          threshold: float):
+    """One remote-access round of per-chunk access counters (DESIGN.md §10,
+    the Grace-Hopper hybrid tier): increment ``counts`` for the remote-touched
+    ``ids``, then split them into ``(hot, cold)``.  Hot chunks reached
+    ``threshold`` touches — they are promoted (migrated) by the caller and
+    their counters reset, mirroring hardware counters that clear when they
+    fire, so a chunk evicted after promotion starts cold again and the
+    oversubscription cliff returns gradually.  Cold chunks stay remote.
+
+    ``threshold == 0`` (or 1) promotes on the first touch — on-demand UM;
+    ``threshold == inf`` never promotes — the pure remote tier.  Hot and
+    cold keep ``ids`` order, so every maximal ascending stretch stays
+    sorted and the batched promotion path (``chunk_runs``) coalesces them
+    into runs."""
+    counts[ids] += 1
+    if math.isinf(threshold):
+        return ids[:0], ids
+    hot_mask = counts[ids] >= threshold
+    hot = ids[hot_mask]
+    counts[hot] = 0
+    return hot, ids[~hot_mask]
 
 
 # -- exact run-level replay of the seed's interleaved insert/pop loop ---------

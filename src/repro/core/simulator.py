@@ -33,7 +33,13 @@ fault-level behaviour is reproduced here: a page/chunk-granular model of
         when the platform's interconnect supports that direction
         (host->device only on NVLink/P9; device->host also on PCIe).
   * asynchronous bulk prefetch (paper §II-C): full-bandwidth transfer on a
-    background copy stream, zero fault latency, overlapped with compute.
+    background copy stream, zero fault latency, overlapped with compute,
+  * Grace-Hopper-style access counters (DESIGN.md §10; Schieffer et al.,
+    'Harnessing Integrated CPU-GPU System Memory for HPC'): a host-pinned
+    region armed via ``enable_access_counters`` is accessed remotely until a
+    chunk's per-chunk counter reaches the threshold, at which point the
+    chunk is promoted — migrated through the normal fault/copy accounting —
+    and participates in normal LRU eviction thereafter.
 
 Timing model: one device (compute) stream and one copy stream.  Page faults
 stall the compute stream (massive parallelism means a faulting kernel makes
@@ -71,6 +77,7 @@ from repro.core.advise import Accessor, MemorySpace
 from repro.core.residency import (
     ResidencyIndex,
     chunk_runs,
+    counter_promote_split,
     expand_m_segs,
     expand_runs,
     merge_pop_runs,
@@ -131,6 +138,11 @@ class Region:
         self.read_mostly = False
         self.preferred: MemorySpace | None = None
         self.accessed_by: tuple[Accessor, ...] = ()
+        # access-counter state (DESIGN.md §10): armed by
+        # enable_access_counters; touch_count is allocated lazily so the
+        # page-granularity sweeps of counter-less variants stay flat
+        self.counter_threshold: float | None = None
+        self.touch_count: np.ndarray | None = None
         # rotating cursor for partial (data-dependent) accesses, e.g. BFS
         self.cursor = 0
         n = max(1, math.ceil(self.nbytes / self.chunk_bytes))
@@ -174,6 +186,8 @@ class SimReport:
     n_faults: int = 0               # fault groups handled
     n_evictions: int = 0            # chunks evicted
     n_dropped: int = 0              # duplicate chunks dropped free of charge
+    n_promotions: int = 0           # chunks migrated by access counters (§10)
+    promoted_bytes: int = 0         # the counter-promoted (hot) working set
     total_s: float = 0.0
 
     def breakdown(self) -> dict[str, float]:
@@ -196,8 +210,9 @@ GRANULARITIES = ("group", "page")
 
 class UMSimulator:
     """Public surface (DESIGN.md §8): ``alloc``, the three ``advise_*`` calls,
-    ``explicit_*`` staging, ``prefetch``, ``host_write``/``host_read``,
-    ``kernel``, ``finish``.  Advise *policy* lives above the simulator — the
+    ``enable_access_counters``, ``explicit_*`` staging, ``prefetch``,
+    ``host_write``/``host_read``, ``kernel``, ``finish``.  Advise *policy*
+    lives above the simulator — the
     variant strategies in ``umbench.variants`` decide which advises to issue
     (role-based ``AdvisePolicy`` included); the simulator only executes them.
     """
@@ -261,6 +276,23 @@ class UMSimulator:
     def advise_accessed_by(self, name: str, accessor: Accessor) -> None:
         r = self.regions[name]
         r.accessed_by = r.accessed_by + (accessor,)
+
+    def enable_access_counters(self, name: str, threshold: float) -> None:
+        """Arm Grace-Hopper-style per-chunk access counters (DESIGN.md §10)
+        on a host-pinned region: device-side remote accesses increment a
+        per-chunk counter, and a chunk's ``threshold``-th touch promotes it
+        — migrates it through the normal fault/copy accounting, after which
+        it participates in normal LRU eviction.  ``threshold`` may be 0 (or
+        1: promote on first touch — on-demand UM) through ``math.inf``
+        (never promote — the pure remote tier).  Counters only gate the
+        kernel remote-access path; host I/O and explicit/prefetch staging
+        are unaffected."""
+        if threshold < 0:
+            raise ValueError(f"counter threshold must be >= 0: {threshold}")
+        r = self.regions[name]
+        r.counter_threshold = float(threshold)
+        if r.touch_count is None:
+            r.touch_count = np.zeros(r.nchunks, dtype=np.int64)
 
     # -- residency bookkeeping -------------------------------------------------
     def _stamps(self, n: int) -> np.ndarray:
@@ -868,6 +900,22 @@ class UMSimulator:
         self._commit_evictions(r, plan)
         return True
 
+    def _count_and_promote(self, r: Region, ids: np.ndarray, *,
+                           duplicate: bool) -> int:
+        """Access-counter bookkeeping for one remote-touched run of
+        non-resident chunks (DESIGN.md §10): increment and split hot/cold
+        (``residency.counter_promote_split``), promote the hot chunks in one
+        batched call through the normal fault-migration path — eviction
+        planning, fault-group coalescing and transfer accounting all reused
+        — and return the bytes the cold remainder accesses remotely."""
+        hot, cold = counter_promote_split(ids, r.touch_count,
+                                          r.counter_threshold)
+        if len(hot):
+            self.report.n_promotions += len(hot)
+            self.report.promoted_bytes += int(r.sizes[hot].sum())
+            self._fault_batch(r, hot, duplicate=duplicate)
+        return int(r.sizes[cold].sum())
+
     # -- public API mirroring the CUDA calls -------------------------------------
     def _copy_walk(self, r: Region, candidates, *, duplicate: bool,
                    asynchronous: bool) -> None:
@@ -1115,7 +1163,11 @@ class UMSimulator:
                         self.t_device = mx
                     self._touch(r, seg)
                 elif pinned_host and self.p.device_can_access_host:
-                    remote_bytes += int(r.sizes[seg].sum())  # mapped, no migration
+                    if r.counter_threshold is None:
+                        remote_bytes += int(r.sizes[seg].sum())  # mapped, no migration
+                    else:
+                        remote_bytes += self._count_and_promote(
+                            r, seg, duplicate=dup_flag)
                 else:
                     self._fault_batch(r, seg, duplicate=dup_flag)
                 pos += ln

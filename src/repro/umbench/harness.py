@@ -1,7 +1,8 @@
 """umbench harness — the paper's experiment matrix (§III):
 
   {explicit, um, um_advise, um_prefetch, um_both} (+ the beyond-paper
-   svm_remote tier in the extended sweep)
+   svm_remote / um_hybrid_counters / um_pinned_zero_copy tiers in the
+   extended sweep)
 × {in-memory (~80 % device mem), oversubscribed (~150 %), oversubscribed_2x
    (200 %, beyond-paper stress regime)}
 × platforms (Intel-Pascal/Volta PCIe, P9-Volta NVLink, Grace-Hopper C2C,
@@ -48,8 +49,11 @@ from repro.umbench.apps import bfs, black_scholes, cg, conv_fft, fdtd3d, matmul
 from repro.umbench.workload import Workload
 
 VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
-# the paper's five variants plus the SVM remote-access-only tier
-EXTENDED_VARIANTS = VARIANTS + ("svm_remote",)
+# beyond-paper tiers: the SVM remote-access-only tier, the Grace-Hopper
+# access-counter hybrid, and host-pinned zero-copy for PCIe platforms
+BEYOND_PAPER_VARIANTS = ("svm_remote", "um_hybrid_counters",
+                         "um_pinned_zero_copy")
+EXTENDED_VARIANTS = VARIANTS + BEYOND_PAPER_VARIANTS
 REGIMES = {
     "in_memory": 0.80,
     "oversubscribed": 1.50,
@@ -98,7 +102,7 @@ class CellResult:
     variant: str
     regime: str
     report: SimReport | None      # None => N/A (explicit cannot oversubscribe;
-    granularity: str = "group"    # svm_remote needs a coherent fabric)
+    granularity: str = "group"    # remote tiers need their platform gate)
 
     @property
     def total_s(self) -> float | None:
@@ -120,8 +124,11 @@ class CellResult:
                 "dtoh_s": round(r.dtoh_s, 4),
                 "htod_gb": round(r.htod_bytes / GB, 3),
                 "dtoh_gb": round(r.dtoh_bytes / GB, 3),
+                "remote_gb": round(r.remote_bytes / GB, 3),
                 "faults": r.n_faults,
                 "evictions": r.n_evictions,
+                "promotions": r.n_promotions,
+                "promoted_gb": round(r.promoted_bytes / GB, 3),
             }),
         }
 
@@ -197,7 +204,9 @@ def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
 def run_extended_matrix(workers: int | None = None,
                         granularity: str = "group") -> list[CellResult]:
     """The seed matrix plus the Grace-Hopper platform, the 200 % regime, and
-    the svm_remote variant (N/A on platforms without a coherent fabric)."""
+    the beyond-paper variant tiers (svm_remote and um_hybrid_counters are
+    N/A on platforms without a coherent fabric; um_pinned_zero_copy needs
+    only ``device_can_access_host``)."""
     return run_matrix(platform_names=EXTENDED_PLATFORMS,
                       regimes=EXTENDED_REGIMES,
                       variants=EXTENDED_VARIANTS,

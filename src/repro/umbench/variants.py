@@ -26,6 +26,26 @@ only the hooks where the paper's variants actually differ:
                   platforms with coherent access in *both* directions
                   (``host_can_access_device and device_can_access_host``);
                   elsewhere the cell is N/A, like explicit-oversubscribed.
+``um_hybrid_counters``
+                  beyond-paper (Schieffer et al., *Harnessing Integrated
+                  CPU-GPU System Memory for HPC: a first look into Grace
+                  Hopper*): remote-access first, with per-chunk hardware
+                  access counters that promote (migrate) a chunk on its
+                  N-th remote touch; promoted chunks participate in normal
+                  LRU eviction, so the oversubscription cliff returns
+                  gradually as the hot set grows.  ``threshold=0`` behaves
+                  like ``um`` from the first touch; ``threshold=inf`` is
+                  bit-identical to ``svm_remote``.  Same coherent-fabric
+                  gate as ``svm_remote``.
+``um_pinned_zero_copy``
+                  host-pinned zero-copy (``cudaHostAlloc`` semantics) — the
+                  degenerate no-coherence cousin of ``svm_remote`` (Cooper
+                  et al.): data lives host-side forever and all GPU traffic
+                  is remote at ``remote_access_efficiency``, with no faults,
+                  migration or eviction.  Because only the *device* ever
+                  maps the other side's memory, the gate is just
+                  ``device_can_access_host`` — it exists on every PCIe
+                  platform where ``svm_remote`` is N/A.
 ================  ============================================================
 
 Strategies are stateless singletons held in a registry; ``get_strategy``
@@ -189,6 +209,51 @@ class SVMRemoteStrategy(VariantStrategy):
         sim.advise_preferred_location(step.name, MemorySpace.HOST)
 
 
+class UMHybridCountersStrategy(VariantStrategy):
+    """Grace-Hopper-style access-counter hybrid (Schieffer et al.): every
+    region starts host-pinned and the GPU accesses it remotely over the
+    coherent link; per-chunk access counters promote a chunk on its
+    ``threshold``-th remote touch, migrating it through the simulator's
+    normal fault/copy accounting.  Cold data never migrates (svm_remote
+    behaviour), hot data converges to on-demand UM behaviour, and because
+    promoted chunks join the normal eviction queues the oversubscription
+    cliff returns *gradually* as the hot working set grows — instead of
+    never (svm_remote) or immediately (um)."""
+
+    name = "um_hybrid_counters"
+    DEFAULT_THRESHOLD = 2.0
+
+    def __init__(self, threshold: float | None = None):
+        self.threshold = (self.DEFAULT_THRESHOLD if threshold is None
+                          else float(threshold))
+
+    def available(self, platform: SimPlatform) -> bool:
+        # access counters ride the coherent fabric (GH C2C, P9 ATS)
+        return platform.host_can_access_device and platform.device_can_access_host
+
+    def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
+        sim.advise_preferred_location(step.name, MemorySpace.HOST)
+        sim.enable_access_counters(step.name, self.threshold)
+
+
+class UMPinnedZeroCopyStrategy(VariantStrategy):
+    """Host-pinned zero-copy (``cudaHostAlloc`` semantics): every region is
+    pinned host memory the GPU maps directly, so all GPU traffic is remote
+    at ``remote_access_efficiency`` — no faults, no migration, no eviction,
+    no oversubscription cliff.  The degenerate no-coherence cousin of
+    ``svm_remote``: data only ever lives host-side and only the device maps
+    the other side's memory, so the gate is ``device_can_access_host``
+    alone and the tier exists on plain PCIe platforms."""
+
+    name = "um_pinned_zero_copy"
+
+    def available(self, platform: SimPlatform) -> bool:
+        return platform.device_can_access_host
+
+    def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
+        sim.advise_preferred_location(step.name, MemorySpace.HOST)
+
+
 # -- registry ------------------------------------------------------------------
 
 _REGISTRY: dict[str, VariantStrategy] = {}
@@ -216,5 +281,6 @@ def strategy_names() -> tuple[str, ...]:
 
 
 for _s in (ExplicitStrategy(), UMStrategy(), UMAdviseStrategy(),
-           UMPrefetchStrategy(), UMBothStrategy(), SVMRemoteStrategy()):
+           UMPrefetchStrategy(), UMBothStrategy(), SVMRemoteStrategy(),
+           UMHybridCountersStrategy(), UMPinnedZeroCopyStrategy()):
     register(_s)

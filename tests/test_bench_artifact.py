@@ -60,6 +60,71 @@ def test_cell_deltas_all_prev_malformed():
 
 
 # ---------------------------------------------------------------------------
+# newly added variants/columns are labelled `new`, never folded into the
+# changed-cell percentages (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+def test_cell_deltas_labels_new_axis_values():
+    """Cells from a variant (or any other axis value) the predecessor never
+    swept are counted as new and named under new_axis_values — they must
+    not appear in the changed list even when their totals obviously differ
+    from every prior cell."""
+    prev = [_row(variant="um", total_s=2.0), _row(variant="um_advise")]
+    cur = prev + [
+        _row(variant="um_hybrid_counters", total_s=99.0),
+        _row(variant="um_pinned_zero_copy", total_s=98.0),
+        _row(variant="um", granularity="page", total_s=97.0),
+    ]
+    d = cell_deltas(prev, cur)
+    assert d["cells_changed"] == 0 and d["changed"] == []
+    assert d["cells_new"] == 3
+    assert d["new_axis_values"] == {
+        "variant": ["um_hybrid_counters", "um_pinned_zero_copy"],
+        "granularity": ["page"],
+    }
+    assert json.loads(json.dumps(d)) == d
+
+
+def test_cell_deltas_new_axis_values_empty_when_axes_unchanged():
+    """A new app x platform combination is a new cell but not a new axis
+    value; an unchanged sweep reports neither."""
+    prev = [_row(app="bs"), _row(app="cg", platform="q")]
+    cur = prev + [_row(app="bs", platform="q")]
+    d = cell_deltas(prev, cur)
+    assert d["cells_new"] == 1
+    assert d["new_axis_values"] == {}
+    assert cell_deltas(prev, prev)["new_axis_values"] == {}
+
+
+def test_committed_bench_new_tiers_present_and_seed_cells_untouched():
+    """The committed artifact sweeps the new tiers, and the seed-parity
+    discipline holds artifact-over-artifact: no pre-existing seed-matrix
+    cell (paper variant x paper platform x paper regime, group granularity)
+    may ever appear in vs_prev's changed list."""
+    from repro.umbench.harness import (
+        DEFAULT_PLATFORMS,
+        DEFAULT_REGIMES,
+        VARIANTS,
+    )
+    with open("BENCH_umbench.json") as f:
+        bench = json.load(f)
+    variants = {r.get("variant") for r in bench["cells"]}
+    assert {"um_hybrid_counters", "um_pinned_zero_copy"} <= variants
+    vs = bench.get("vs_prev")
+    if vs is None:
+        pytest.skip("no predecessor artifact recorded")
+    seed_changed = [
+        c for c in vs.get("changed", [])
+        if (len(c.get("cell", [])) == 5
+            and c["cell"][1] in DEFAULT_PLATFORMS
+            and c["cell"][2] in VARIANTS
+            and c["cell"][3] in DEFAULT_REGIMES
+            and c["cell"][4] == "group")
+    ]
+    assert seed_changed == [], seed_changed
+
+
+# ---------------------------------------------------------------------------
 # sweep_workers must record the pool the sweeps actually used
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,53 @@
+"""Docs-consistency gate (ISSUE 4): the variant tables in README.md and
+DESIGN.md §8 must list exactly the registered strategies, so the docs
+cannot silently rot as the registry grows.  CI runs this file as a named
+step; it is also part of tier-1.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.umbench.variants import strategy_names
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def variant_table_names(path: Path) -> set[str]:
+    """Backticked first-column entries of every markdown table whose header
+    row starts with a ``variant`` column."""
+    names: set[str] = set()
+    in_table = False
+    for line in path.read_text().splitlines():
+        row = line.strip()
+        if not row.startswith("|"):
+            in_table = False
+            continue
+        first = row.strip("|").split("|")[0].strip()
+        if first == "variant":
+            in_table = True
+            continue
+        if not in_table or set(first) <= {"-", ":", " "}:   # separator row
+            continue
+        m = re.fullmatch(r"`([A-Za-z0-9_]+)`", first)
+        if m:
+            names.add(m.group(1))
+    return names
+
+
+@pytest.mark.parametrize("doc", ["README.md", "DESIGN.md"])
+def test_variant_table_matches_registry(doc):
+    documented = variant_table_names(REPO / doc)
+    assert documented, f"{doc}: no variant table found"
+    registered = set(strategy_names())
+    assert documented == registered, (
+        f"{doc} variant table diverges from strategy_names(): "
+        f"undocumented={sorted(registered - documented)}, "
+        f"stale={sorted(documented - registered)}")
+
+
+def test_registry_matches_extended_matrix():
+    """Every registered strategy is actually swept: the extended matrix's
+    variant axis and the registry are the same set."""
+    from repro.umbench.harness import EXTENDED_VARIANTS
+    assert set(EXTENDED_VARIANTS) == set(strategy_names())

@@ -1,0 +1,268 @@
+"""Access-counter hybrid + host-pinned zero-copy tiers (ISSUE 4): the
+documented availability-gate table for every registered strategy x every
+platform, the counter-threshold edge cases (N=0 => um from the first touch,
+N=inf => bit-identical to svm_remote), promotion/eviction interplay (the
+gradual oversubscription cliff), and the counter_promote_split primitive.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.residency import counter_promote_split
+from repro.core.simulator import GB, UMSimulator
+from repro.umbench import platforms as plat
+from repro.umbench import variants as var
+from repro.umbench.platforms import working_set_chunks
+from repro.umbench.harness import (
+    BEYOND_PAPER_VARIANTS,
+    REGIMES,
+    WORKLOADS,
+    run_cell,
+    run_matrix,
+)
+
+# ---------------------------------------------------------------------------
+# The documented gate table (README.md / DESIGN.md §8 variant tables carry
+# the same gates in prose; tests/test_docs_consistency.py pins the name set)
+# ---------------------------------------------------------------------------
+
+GATES = {
+    "explicit": lambda p: True,
+    "um": lambda p: True,
+    "um_advise": lambda p: True,
+    "um_prefetch": lambda p: True,
+    "um_both": lambda p: True,
+    "svm_remote": lambda p: p.host_can_access_device and p.device_can_access_host,
+    "um_hybrid_counters": lambda p: (p.host_can_access_device
+                                     and p.device_can_access_host),
+    "um_pinned_zero_copy": lambda p: p.device_can_access_host,
+}
+
+
+def test_gate_table_covers_every_registered_strategy():
+    """Registering a strategy without documenting its gate here fails."""
+    assert set(GATES) == set(var.strategy_names())
+
+
+@pytest.mark.parametrize("name", sorted(GATES))
+@pytest.mark.parametrize("pname", sorted(plat.PLATFORMS))
+def test_availability_matches_gate_table(name, pname):
+    p = plat.PLATFORMS[pname]
+    assert var.get_strategy(name).available(p) == GATES[name](p)
+
+
+def test_na_cells_where_gate_fails():
+    """run_cell returns a report-less (N/A) cell exactly where the gate
+    says the memory model does not exist."""
+    assert run_cell("bs", "um_hybrid_counters", "intel-volta-pcie",
+                    "in_memory").report is None
+    assert run_cell("bs", "um_hybrid_counters", "tpu-v5e-host",
+                    "in_memory").report is None
+    # zero-copy needs no coherent fabric: it exists on plain PCIe
+    assert run_cell("bs", "um_pinned_zero_copy", "intel-pascal-pcie",
+                    "in_memory").report is not None
+    assert run_cell("bs", "um_hybrid_counters", "grace-hopper-c2c",
+                    "in_memory").report is not None
+
+
+# ---------------------------------------------------------------------------
+# counter_promote_split (the §10 primitive)
+# ---------------------------------------------------------------------------
+
+def test_counter_promote_split_increments_and_resets():
+    counts = np.zeros(8, dtype=np.int64)
+    ids = np.arange(4)
+    hot, cold = counter_promote_split(ids, counts, 2.0)
+    assert len(hot) == 0 and np.array_equal(cold, ids)
+    assert np.array_equal(counts[:4], [1, 1, 1, 1])
+    hot, cold = counter_promote_split(ids, counts, 2.0)
+    assert np.array_equal(hot, ids) and len(cold) == 0
+    assert np.array_equal(counts[:4], [0, 0, 0, 0])  # cleared when it fires
+
+
+def test_counter_promote_split_inf_never_promotes():
+    counts = np.zeros(4, dtype=np.int64)
+    ids = np.arange(4)
+    for _ in range(5):
+        hot, cold = counter_promote_split(ids, counts, math.inf)
+        assert len(hot) == 0 and np.array_equal(cold, ids)
+    assert np.array_equal(counts, [5, 5, 5, 5])
+
+
+def test_counter_promote_split_preserves_order_for_run_coalescing():
+    """Hot/cold keep ids order (including wrapped-ascending partial-kernel
+    ids) so the batched promotion path can split them into runs."""
+    counts = np.array([1, 0, 1, 1, 0, 1], dtype=np.int64)
+    ids = np.array([4, 5, 0, 1, 2], dtype=np.int64)    # wrapped walk
+    hot, cold = counter_promote_split(ids, counts, 2.0)
+    assert np.array_equal(hot, [5, 0, 2])              # ids order kept
+    assert np.array_equal(cold, [4, 1])
+    assert np.array_equal(counts, [0, 1, 0, 1, 1, 0])
+
+
+# ---------------------------------------------------------------------------
+# Threshold edge cases: the hybrid's two degenerate ends
+# ---------------------------------------------------------------------------
+
+def _report(strategy, app, platform, regime):
+    total = REGIMES[regime] * platform.device_mem_gb * GB
+    wl = WORKLOADS[app](total)
+    sim = UMSimulator(platform)
+    strategy.lower(wl, sim)
+    return sim.finish()
+
+
+@pytest.mark.parametrize("app", ["bs", "graph500"])
+@pytest.mark.parametrize("platform", [plat.GRACE_HOPPER, plat.P9_VOLTA],
+                         ids=lambda p: p.name)
+def test_threshold_zero_behaves_like_um(app, platform):
+    """N=0: every chunk promotes on its first touch through the same fault
+    path um takes, so the hybrid is um from the first touch on — identical
+    counters and times, with the mechanism showing up only in the promotion
+    counters (every migrated chunk was a counter promotion)."""
+    r_um = _report(var.get_strategy("um"), app, platform, "oversubscribed")
+    r_h = _report(var.UMHybridCountersStrategy(0), app, platform,
+                  "oversubscribed")
+    assert r_h.n_promotions > 0
+    masked = dataclasses.replace(r_h, n_promotions=0, promoted_bytes=0)
+    assert masked == r_um
+
+
+@pytest.mark.parametrize("app", ["bs", "graph500"])
+@pytest.mark.parametrize("platform", [plat.GRACE_HOPPER, plat.P9_VOLTA],
+                         ids=lambda p: p.name)
+def test_threshold_inf_bit_identical_to_svm_remote(app, platform):
+    """N=inf: counters tick but never fire, so the hybrid IS the pure
+    remote tier — the whole SimReport matches field-for-field."""
+    r_svm = _report(var.get_strategy("svm_remote"), app, platform,
+                    "oversubscribed")
+    r_h = _report(var.UMHybridCountersStrategy(math.inf), app, platform,
+                  "oversubscribed")
+    assert r_h == r_svm
+    assert r_h.n_promotions == 0 and r_h.n_faults == 0
+
+
+def test_negative_threshold_rejected():
+    sim = UMSimulator(plat.GRACE_HOPPER)
+    sim.alloc("a", GB)
+    with pytest.raises(ValueError, match="threshold"):
+        sim.enable_access_counters("a", -1)
+
+
+# ---------------------------------------------------------------------------
+# Promotion / eviction interplay
+# ---------------------------------------------------------------------------
+
+def test_hybrid_sits_between_um_and_svm_in_memory():
+    """In-memory with heavy reuse (BS re-reads its inputs every pass): the
+    default threshold promotes the re-read working set after its cold
+    remote passes, so the hybrid lands between migrate-everything (um) and
+    remote-everything (svm_remote), with both hot and cold traffic."""
+    rep = {v: run_cell("bs", v, "grace-hopper-c2c", "in_memory").report
+           for v in ("um", "um_hybrid_counters", "svm_remote")}
+    h = rep["um_hybrid_counters"]
+    assert h.n_promotions > 0 and h.promoted_bytes > 0     # hot set migrated
+    assert h.remote_bytes > 0                              # cold passes remote
+    assert rep["um"].total_s < h.total_s < rep["svm_remote"].total_s
+
+
+def test_hybrid_oversubscribed_cliff_returns_gradually():
+    """Promoted chunks join the normal eviction queues: under 200 %
+    oversubscription the hybrid evicts (unlike svm_remote) but far less
+    than um, and completes without raising; raising the threshold keeps
+    more of the working set remote, shedding evictions further."""
+    um = run_cell("cg", "um", "grace-hopper-c2c", "oversubscribed_2x").report
+    h2 = run_cell("cg", "um_hybrid_counters", "grace-hopper-c2c",
+                  "oversubscribed_2x").report
+    h4 = run_cell("cg", var.UMHybridCountersStrategy(4), "grace-hopper-c2c",
+                  "oversubscribed_2x").report
+    svm = run_cell("cg", "svm_remote", "grace-hopper-c2c",
+                   "oversubscribed_2x").report
+    assert svm.n_evictions == 0
+    assert 0 < h2.n_evictions < um.n_evictions
+    assert h4.n_evictions < h2.n_evictions
+    assert h4.remote_bytes > h2.remote_bytes
+
+
+def test_evicted_hot_chunk_starts_cold_again():
+    """A counter clears when it fires, so a promoted-then-evicted chunk
+    needs N fresh touches to re-promote.  Two consequences pin that: under
+    pressure some chunk promotes more than once (promotion events exceed
+    the whole working set's chunk count), and at threshold 2 every
+    (re-)promotion was preceded by at least one fresh cold remote touch
+    (remote traffic >= promoted traffic).  If eviction stopped re-cooling
+    chunks, re-promotions would fire on the first touch and the remote
+    traffic would fall below the promoted bytes."""
+    over = run_cell("bs", "um_hybrid_counters", "grace-hopper-c2c",
+                    "oversubscribed_2x").report
+    assert over.n_evictions > 0
+    ws_chunks = working_set_chunks(plat.GRACE_HOPPER,
+                                   REGIMES["oversubscribed_2x"])
+    assert over.n_promotions > ws_chunks          # some chunk re-promoted
+    assert over.remote_bytes >= over.promoted_bytes
+
+
+# ---------------------------------------------------------------------------
+# Host-pinned zero-copy
+# ---------------------------------------------------------------------------
+
+def test_zero_copy_never_migrates_anywhere_it_exists():
+    """All GPU traffic stays remote on every gated platform — PCIe
+    included — with no faults, migration, eviction or cliff."""
+    for pname in ("intel-pascal-pcie", "intel-volta-pcie", "p9-volta-nvlink",
+                  "grace-hopper-c2c"):
+        for regime in ("in_memory", "oversubscribed_2x"):
+            r = run_cell("bs", "um_pinned_zero_copy", pname, regime).report
+            assert r is not None, (pname, regime)
+            assert r.n_faults == 0 and r.n_evictions == 0
+            assert r.htod_bytes == 0 and r.dtoh_bytes == 0
+            assert r.remote_bytes > 0
+
+
+def test_zero_copy_is_degenerate_svm_on_coherent_fabrics():
+    """Where both exist the two remote tiers coincide — zero-copy is the
+    no-coherence cousin, distinguished only by its wider platform gate."""
+    a = run_cell("cg", "um_pinned_zero_copy", "p9-volta-nvlink",
+                 "oversubscribed").report
+    b = run_cell("cg", "svm_remote", "p9-volta-nvlink",
+                 "oversubscribed").report
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# First-class members of the sweep
+# ---------------------------------------------------------------------------
+
+def test_new_tiers_in_extended_sweep_table(monkeypatch):
+    """Both new variants are swept and appear in table_extended_sweep with
+    the hot/cold working-set columns; N/A cells render NA columns."""
+    from benchmarks import paper_tables
+
+    res = run_matrix(apps=["bs"],
+                     platform_names=("intel-volta-pcie", "grace-hopper-c2c"),
+                     regimes=("in_memory",), variants=BEYOND_PAPER_VARIANTS)
+    monkeypatch.setattr(paper_tables, "_EXTENDED", res)
+    rows = paper_tables.table_extended_sweep()
+    assert rows[0].endswith("hot_gb,cold_gb")
+    hyb = [r for r in rows if ",um_hybrid_counters," in r]
+    zc = [r for r in rows if ",um_pinned_zero_copy," in r]
+    assert any(",intel-volta-pcie," in r and r.endswith("NA,NA,NA,NA")
+               for r in hyb)                       # gate fails: all-NA cell
+    gh = next(r for r in hyb if ",grace-hopper-c2c," in r)
+    hot_gb, cold_gb = map(float, gh.split(",")[-2:])
+    assert hot_gb > 0 and cold_gb > 0              # the threshold is visible
+    pcie = next(r for r in zc if ",intel-volta-pcie," in r)
+    hot_gb, cold_gb = map(float, pcie.split(",")[-2:])
+    assert hot_gb == 0 and cold_gb > 0
+
+
+def test_row_carries_promotion_and_remote_columns():
+    row = run_cell("bs", "um_hybrid_counters", "grace-hopper-c2c",
+                   "in_memory").row()
+    assert row["promotions"] > 0
+    assert row["promoted_gb"] > 0
+    assert row["remote_gb"] > 0
+    um_row = run_cell("bs", "um", "intel-pascal-pcie", "in_memory").row()
+    assert um_row["promotions"] == 0 and um_row["promoted_gb"] == 0

@@ -21,8 +21,14 @@ def test_extended_matrix_definitions():
     assert "grace-hopper-c2c" in plat.PLATFORMS
     assert "oversubscribed_2x" in EXTENDED_REGIMES
     assert REGIMES["oversubscribed_2x"] == 2.0
-    from repro.umbench.harness import EXTENDED_VARIANTS, VARIANTS
-    assert EXTENDED_VARIANTS == VARIANTS + ("svm_remote",)
+    from repro.umbench.harness import (
+        BEYOND_PAPER_VARIANTS,
+        EXTENDED_VARIANTS,
+        VARIANTS,
+    )
+    assert EXTENDED_VARIANTS == VARIANTS + BEYOND_PAPER_VARIANTS
+    assert BEYOND_PAPER_VARIANTS == (
+        "svm_remote", "um_hybrid_counters", "um_pinned_zero_copy")
 
 
 def test_grace_hopper_from_run_matrix():

@@ -236,10 +236,10 @@ def test_svm_remote_access_vs_migrate_tradeoff():
 
 
 def test_svm_remote_in_extended_sweep_table(monkeypatch):
-    """svm_remote is a sixth variant of the extended sweep and shows up in
-    ``table_extended_sweep`` (N/A where the platform lacks coherent remote
-    access).  The table is fed a small pre-run slab via the memo so tier-1
-    does not pay for the full 576-cell extended sweep."""
+    """svm_remote is a first-class variant of the extended sweep and shows
+    up in ``table_extended_sweep`` (N/A where the platform lacks coherent
+    remote access).  The table is fed a small pre-run slab via the memo so
+    tier-1 does not pay for the full extended sweep."""
     from benchmarks import paper_tables
 
     res = run_matrix(apps=["bs", "cg"],
