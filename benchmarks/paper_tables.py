@@ -124,21 +124,21 @@ def table_claims_summary() -> list[str]:
     rows = ["table,claim,measured,expectation"]
     rows.append(
         "claims,intel_oversub_advise_bs,"
-        f"{sp[('bs','intel-volta-pcie','oversubscribed','um_advise')]:.2f}x,"
+        f"{sp[('bs','intel-volta-pcie','oversubscribed','um_advise','group')]:.2f}x,"
         ">=1.1x (paper: up to 25%)")
     rows.append(
         "claims,p9_inmem_advise_cg,"
-        f"{sp[('cg','p9-volta-nvlink','in_memory','um_advise')]:.2f}x,"
+        f"{sp[('cg','p9-volta-nvlink','in_memory','um_advise','group')]:.2f}x,"
         ">=1.3x (paper: up to 34%+)")
     rows.append(
         "claims,p9_oversub_advise_bs,"
-        f"{sp[('bs','p9-volta-nvlink','oversubscribed','um_advise')]:.2f}x,"
+        f"{sp[('bs','p9-volta-nvlink','oversubscribed','um_advise','group')]:.2f}x,"
         "<=0.5x (paper: ~3x degradation)")
     rows.append(
         "claims,intel_inmem_prefetch_cg,"
-        f"{sp[('cg','intel-volta-pcie','in_memory','um_prefetch')]:.2f}x,"
+        f"{sp[('cg','intel-volta-pcie','in_memory','um_prefetch','group')]:.2f}x,"
         ">=1.5x (paper: up to 50%)")
-    p9 = sp[("cg", "p9-volta-nvlink", "in_memory", "um_prefetch")]
+    p9 = sp[("cg", "p9-volta-nvlink", "in_memory", "um_prefetch", "group")]
     rows.append(
         f"claims,p9_inmem_prefetch_cg,{p9:.2f}x,"
         "< intel (paper: little benefit on P9)")
@@ -168,7 +168,7 @@ def table_extended_sweep() -> list[str]:
                 and c.variant in VARIANTS):
             continue
         t = "NA" if c.total_s is None else f"{c.total_s:.4f}"
-        s = sp.get((c.app, c.platform, c.regime, c.variant))
+        s = sp.get((c.app, c.platform, c.regime, c.variant, c.granularity))
         s = "NA" if s is None else f"{s:.2f}"
         if c.report is None:
             hot = cold = "NA"
@@ -177,6 +177,46 @@ def table_extended_sweep() -> list[str]:
             cold = f"{c.report.remote_bytes / GB:.3f}"
         rows.append(f"ext,{c.app},{c.platform},{c.regime},{c.variant},{t},{s},"
                     f"{hot},{cold}")
+    return rows
+
+
+def table_prefetch_pipeline() -> list[str]:
+    """Staged vs capacity-aware pipelined prefetch scheduling (DESIGN.md
+    §11), per app x platform x regime: the monolithic staging-point
+    prefetch against the per-kernel-step windowed schedule, for both the
+    prefetch-only and the advise+prefetch pairs.  ``*_overlap_s`` is the
+    prefetch copy time never exposed as an arrival stall (copy-stream busy
+    time minus waits) — in-memory the staged schedule's overlap is ~0
+    (every candidate is copied before the first kernel, which then waits
+    for all of it) while the windowed schedule hides later steps' copies
+    behind earlier steps' compute.  Read the column together with
+    ``pipelined_vs_staged``: a *self-evicting* staged schedule also shows
+    copy > wait, but because the evicted head was copied and never waited
+    on (it refaults instead) — wasted copy, not hidden copy — and the same
+    cells show pipelined_vs_staged > 1."""
+    cells = _index(matrix_cells(extended=True))
+    pairs = (("prefetch", "um_prefetch", "um_prefetch_pipelined"),
+             ("both", "um_both", "um_both_pipelined"))
+    rows = ["table,app,platform,regime,pair,staged_s,pipelined_s,"
+            "pipelined_vs_staged,staged_overlap_s,pipelined_overlap_s"]
+    for plat in EXTENDED_PLATFORMS:
+        for app in APPS:
+            for regime in ("in_memory", "oversubscribed",
+                           "oversubscribed_2x"):
+                for pair, staged, piped in pairs:
+                    s = cells[(app, plat, staged, regime)].report
+                    p = cells[(app, plat, piped, regime)].report
+                    # both tiers are all-platform today, but honor N/A the
+                    # way every other table does rather than crash on it
+                    ratio = ("NA" if not (s and p and p.total_s)
+                             else f"{s.total_s / p.total_s:.2f}")
+                    def fmt(rep, attr):
+                        return "NA" if rep is None else f"{getattr(rep, attr):.4f}"
+                    rows.append(
+                        f"psched,{app},{plat},{regime},{pair},"
+                        f"{fmt(s, 'total_s')},{fmt(p, 'total_s')},{ratio},"
+                        f"{fmt(s, 'prefetch_overlap_s')},"
+                        f"{fmt(p, 'prefetch_overlap_s')}")
     return rows
 
 

@@ -6,6 +6,7 @@ Emits, as CSV blocks:
   fig4_7        traced-app breakdowns (compute/stall/HtoD/DtoH)
   claims        headline-claim summary vs paper expectations
   ext           extended sweep (grace-hopper-c2c + 200 % regime) [not --fast]
+  psched        staged vs pipelined prefetch scheduling (§11) [not --fast]
   page          full-matrix 64 KB page-granularity sweep [not --fast]
   table1        working-set sizing
   lm            per-arch reduced train/decode step timings (real CPU)
@@ -137,6 +138,7 @@ def main() -> None:
     timed("fig4_7", paper_tables.table_fig4_7_breakdowns)
     if not fast:
         timed("ext", paper_tables.table_extended_sweep)
+        timed("psched", paper_tables.table_prefetch_pipeline)
         timed("page", paper_tables.table_page_granularity)
         timed("kernel", lm_bench.kernel_rows)
         timed("lm", lm_bench.arch_step_rows)

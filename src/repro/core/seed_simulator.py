@@ -338,16 +338,23 @@ class UMSimulator:
                 self.report.dtoh_s += t
                 self.report.dtoh_bytes += r.chunk_size(i)
 
-    def prefetch(self, name: str, dst: MemorySpace = MemorySpace.DEVICE) -> None:
+    def prefetch(self, name: str, dst: MemorySpace = MemorySpace.DEVICE,
+                 nbytes: int | None = None) -> None:
         """cudaMemPrefetchAsync: bulk, background stream, no faults.
 
         Prefetching a READ_MOSTLY region creates duplicates immediately
         (paper §II-C); prefetching away from a PREFERRED_LOCATION un-pins
-        (paper: 'the pages will no longer be pinned').
+        (paper: 'the pages will no longer be pinned').  Prefetching to the
+        host drops READ_MOSTLY duplicates for free (host copy valid,
+        DESIGN.md §2).  ``nbytes`` limits the call to the region's first
+        chunks (``host_write`` semantics), mirroring the vectorized engine
+        so §11 prefetch plans replay on either engine.
         """
         r = self.regions[name]
+        nch = (r.nchunks if nbytes is None
+               else min(r.nchunks, max(1, math.ceil(nbytes / r.chunk_bytes))))
         if dst is MemorySpace.DEVICE:
-            for i in range(r.nchunks):
+            for i in range(nch):
                 if not r.device_resident(i):
                     self._bulk_copy_chunk(
                         r, i, duplicate=r.read_mostly, asynchronous=True
@@ -355,8 +362,16 @@ class UMSimulator:
         else:
             if r.preferred is MemorySpace.DEVICE:
                 r.preferred = None  # un-pin
-            for i in range(r.nchunks):
-                if r.loc[i] is MemorySpace.DEVICE:
+            for i in range(nch):
+                if r.duplicated[i] and r.loc[i] is not MemorySpace.DEVICE:
+                    # READ_MOSTLY duplicate: the host copy is still valid,
+                    # so the "prefetch to host" is a free drop — release the
+                    # device copy, move nothing (DESIGN.md §2)
+                    r.duplicated[i] = False
+                    self.report.n_dropped += 1
+                    if self._resident_remove((r.name, i)):
+                        self.device_used -= r.chunk_size(i)
+                elif r.loc[i] is MemorySpace.DEVICE:
                     size = r.chunk_size(i)
                     xfer = size / (self.p.link_bw_gbs * GB)
                     self.t_copy = max(self.t_copy, self.t_device) + xfer

@@ -143,6 +143,10 @@ class Region:
         # page-granularity sweeps of counter-less variants stay flat
         self.counter_threshold: float | None = None
         self.touch_count: np.ndarray | None = None
+        # chunks whose device copy was installed by an explicit prefetch
+        # call (lazily allocated, §11 overlap accounting): arrival waits on
+        # these count as prefetch_wait_s; eager-restore copies do not
+        self.pf_mark: np.ndarray | None = None
         # rotating cursor for partial (data-dependent) accesses, e.g. BFS
         self.cursor = 0
         n = max(1, math.ceil(self.nbytes / self.chunk_bytes))
@@ -188,6 +192,14 @@ class SimReport:
     n_dropped: int = 0              # duplicate chunks dropped free of charge
     n_promotions: int = 0           # chunks migrated by access counters (§10)
     promoted_bytes: int = 0         # the counter-promoted (hot) working set
+    # copy/compute overlap accounting (DESIGN.md §11; vectorized engine
+    # only — the seed oracle predates the fields and leaves them 0):
+    prefetch_copy_s: float = 0.0    # HtoD busy time of prefetch-issued
+    #                                 copies on the async copy stream
+    prefetch_wait_s: float = 0.0    # compute-stream stalls waiting on
+    #                                 in-flight async-copy arrivals
+    prefetch_overlap_s: float = 0.0  # prefetch copy time hidden under
+    #                                  compute = copy_s - wait_s, >= 0
     total_s: float = 0.0
 
     def breakdown(self) -> dict[str, float]:
@@ -339,6 +351,14 @@ class UMSimulator:
             self._index.queue(qi).remove(e >> 1, b - a, int(grp.min()),
                                          int(grp.max()))
             r.q_live[qi] -= b - a
+
+    @staticmethod
+    def _pf_clear(r: Region, ids: np.ndarray) -> None:
+        """Forget prefetch attribution for chunks leaving the device: their
+        next device copy is whoever re-installs them (fault or eager
+        restore), not the original prefetch (§11 overlap accounting)."""
+        if r.pf_mark is not None and len(ids):
+            r.pf_mark[ids] = False
 
     def _queue_anomaly(self) -> bool:
         """True when any region holds live chunks filed under a queue that
@@ -511,6 +531,7 @@ class UMSimulator:
             self._index_remove(r, ids)
             r.duplicated[ids[d]] = False       # free drop (host copy valid)
             r.on_device[ids[~d]] = False       # migrated back to host
+            self._pf_clear(r, ids)
 
     def _evict_for(self, need: int) -> None:
         """Evict least-recently-resident chunks until `need` bytes fit.
@@ -969,21 +990,55 @@ class UMSimulator:
             self.report.dtoh_s += t
             self.report.dtoh_bytes += int(sz.sum())
 
-    def prefetch(self, name: str, dst: MemorySpace = MemorySpace.DEVICE) -> None:
+    def prefetch(self, name: str, dst: MemorySpace = MemorySpace.DEVICE,
+                 nbytes: int | None = None) -> None:
         """cudaMemPrefetchAsync: bulk, background stream, no faults.
 
         Prefetching a READ_MOSTLY region creates duplicates immediately
         (paper §II-C); prefetching away from a PREFERRED_LOCATION un-pins
-        (paper: 'the pages will no longer be pinned').
+        (paper: 'the pages will no longer be pinned').  Prefetching *to the
+        host* drops READ_MOSTLY duplicates for free — the host copy is
+        still valid, so there is nothing to move (DESIGN.md §2), only
+        device memory to release — while moved chunks pay the DtoH copy.
+
+        ``nbytes`` limits the prefetch to the first ``nbytes`` of the
+        region (``host_write`` semantics; rounded up to whole chunks) — the
+        capacity-aware scheduler (DESIGN.md §11) uses it to cut a prefetch
+        window at a chunk boundary instead of staging a whole region.
         """
         r = self.regions[name]
+        nch = (r.nchunks if nbytes is None
+               else min(r.nchunks, max(1, math.ceil(nbytes / r.chunk_bytes))))
         if dst is MemorySpace.DEVICE:
-            self._copy_walk(r, lambda rr: ~rr.resident_mask(),
+            def candidates(rr: Region) -> np.ndarray:
+                m = ~rr.resident_mask()
+                m[nch:] = False
+                return m
+            h0 = self.report.htod_s
+            before = r.resident_mask()
+            self._copy_walk(r, candidates,
                             duplicate=r.read_mostly, asynchronous=True)
+            # copy-stream busy time attributable to this prefetch (the HtoD
+            # added by the walk; eviction write-backs stay in dtoh_s)
+            self.report.prefetch_copy_s += self.report.htod_s - h0
+            new = r.resident_mask() & ~before
+            if new.any():
+                if r.pf_mark is None:
+                    r.pf_mark = np.zeros(r.nchunks, dtype=bool)
+                r.pf_mark[new] = True
         else:
             if r.preferred is MemorySpace.DEVICE:
                 r.preferred = None  # un-pin
-            ids = np.nonzero(r.on_device)[0]
+            dup = np.nonzero(r.duplicated[:nch])[0]
+            if len(dup):
+                # free drop: no transfer, no clock movement — just release
+                # the device copy and un-file it from the residency index
+                self.device_used -= int(r.sizes[dup].sum())
+                self.report.n_dropped += len(dup)
+                self._index_remove(r, dup)
+                r.duplicated[dup] = False
+                self._pf_clear(r, dup)
+            ids = np.nonzero(r.on_device[:nch])[0]
             if len(ids):
                 sz = r.sizes[ids]
                 t = float((sz / (self.p.link_bw_gbs * GB)).sum())
@@ -994,6 +1049,7 @@ class UMSimulator:
                 self._index_remove(r, ids)
                 r.on_device[ids] = False
                 r.duplicated[ids] = False
+                self._pf_clear(r, ids)
 
     def _eager_restore(self) -> None:
         """Coherent-fabric runtime behaviour under memory pressure: pages
@@ -1035,6 +1091,7 @@ class UMSimulator:
             self.device_used -= int(r.sizes[gone].sum())
             if len(gone):
                 self._index_remove(r, gone)
+                self._pf_clear(r, gone)
         dev_ids = ids[r.on_device[ids]]
         if len(dev_ids):
             sz = r.sizes[dev_ids]
@@ -1063,6 +1120,7 @@ class UMSimulator:
                 self.device_used -= total
                 self._index_remove(r, dev_ids)
                 r.on_device[dev_ids] = False
+                self._pf_clear(r, dev_ids)
         r.populated[ids] = True
 
     def host_read(self, name: str, nbytes: int | None = None) -> None:
@@ -1095,6 +1153,7 @@ class UMSimulator:
             self.device_used -= total
             self._index_remove(r, sel)
             r.on_device[sel] = False
+            self._pf_clear(r, sel)
 
     def kernel(
         self,
@@ -1158,8 +1217,16 @@ class UMSimulator:
                 seg = rem[:ln]
                 if res[0]:
                     # may still be in flight from an async prefetch
-                    mx = float(r.arrival[seg].max())
+                    am = int(np.argmax(r.arrival[seg]))
+                    mx = float(r.arrival[seg[am]])
                     if mx > self.t_device:
+                        # exposed (un-hidden) copy time: the kernel reached
+                        # data the copy stream has not delivered yet.  Only
+                        # counted when a *prefetch-issued* copy is what the
+                        # kernel waits on — eager-restore traffic also sets
+                        # arrivals but is not prefetch (§11 accounting)
+                        if r.pf_mark is not None and r.pf_mark[seg[am]]:
+                            self.report.prefetch_wait_s += mx - self.t_device
                         self.t_device = mx
                     self._touch(r, seg)
                 elif pinned_host and self.p.device_can_access_host:
@@ -1194,5 +1261,10 @@ class UMSimulator:
         self._eager_restore()
 
     def finish(self) -> SimReport:
+        # prefetch copy time the compute stream never saw: busy copy-stream
+        # seconds minus the stalls kernels spent waiting on arrivals
+        # (staged-vs-pipelined schedules differ exactly here, DESIGN.md §11)
+        self.report.prefetch_overlap_s = max(
+            0.0, self.report.prefetch_copy_s - self.report.prefetch_wait_s)
         self.report.total_s = max(self.t_device, self.t_copy)
         return self.report

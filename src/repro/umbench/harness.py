@@ -1,8 +1,9 @@
 """umbench harness — the paper's experiment matrix (§III):
 
   {explicit, um, um_advise, um_prefetch, um_both} (+ the beyond-paper
-   svm_remote / um_hybrid_counters / um_pinned_zero_copy tiers in the
-   extended sweep)
+   svm_remote / um_hybrid_counters / um_pinned_zero_copy tiers and the
+   pipelined prefetch schedules um_prefetch_pipelined / um_both_pipelined
+   in the extended sweep)
 × {in-memory (~80 % device mem), oversubscribed (~150 %), oversubscribed_2x
    (200 %, beyond-paper stress regime)}
 × platforms (Intel-Pascal/Volta PCIe, P9-Volta NVLink, Grace-Hopper C2C,
@@ -50,9 +51,11 @@ from repro.umbench.workload import Workload
 
 VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
 # beyond-paper tiers: the SVM remote-access-only tier, the Grace-Hopper
-# access-counter hybrid, and host-pinned zero-copy for PCIe platforms
+# access-counter hybrid, host-pinned zero-copy for PCIe platforms, and the
+# capacity-aware pipelined prefetch schedules (DESIGN.md §11)
 BEYOND_PAPER_VARIANTS = ("svm_remote", "um_hybrid_counters",
-                         "um_pinned_zero_copy")
+                         "um_pinned_zero_copy", "um_prefetch_pipelined",
+                         "um_both_pipelined")
 EXTENDED_VARIANTS = VARIANTS + BEYOND_PAPER_VARIANTS
 REGIMES = {
     "in_memory": 0.80,
@@ -129,6 +132,9 @@ class CellResult:
                 "evictions": r.n_evictions,
                 "promotions": r.n_promotions,
                 "promoted_gb": round(r.promoted_bytes / GB, 3),
+                "prefetch_copy_s": round(r.prefetch_copy_s, 4),
+                "prefetch_wait_s": round(r.prefetch_wait_s, 4),
+                "prefetch_overlap_s": round(r.prefetch_overlap_s, 4),
             }),
         }
 
@@ -227,19 +233,24 @@ def default_workers() -> int:
 
 
 def speedup_vs_um(results: list[CellResult]) -> dict[tuple, float]:
-    """(app, platform, regime, variant) -> total_time(um) / total_time(variant).
+    """(app, platform, regime, variant, granularity)
+    -> total_time(um) / total_time(variant).
 
-    Cells with no report (N/A) and cells whose baseline ``um`` total is
-    missing or zero are skipped."""
+    The baseline is the ``um`` cell of the SAME granularity — a mixed
+    group+page result list (e.g. a concatenated extended+page sweep) must
+    never divide a page-mode cell by a group-mode baseline.  Cells with no
+    report (N/A) and cells whose baseline ``um`` total is missing or zero
+    are skipped."""
     base = {
-        (r.app, r.platform, r.regime): r.total_s
+        (r.app, r.platform, r.regime, r.granularity): r.total_s
         for r in results if r.variant == "um" and r.total_s
     }
     out = {}
     for r in results:
         if not r.total_s:       # N/A (None) or degenerate zero-total cells
             continue
-        key = (r.app, r.platform, r.regime)
+        key = (r.app, r.platform, r.regime, r.granularity)
         if key in base:
-            out[(r.app, r.platform, r.regime, r.variant)] = base[key] / r.total_s
+            out[(r.app, r.platform, r.regime, r.variant,
+                 r.granularity)] = base[key] / r.total_s
     return out

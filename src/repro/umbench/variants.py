@@ -17,6 +17,15 @@ only the hooks where the paper's variants actually differ:
 ``um_prefetch``   cudaMemPrefetchAsync of the workload's prefetch candidates
                   at the staging point.
 ``um_both``       advises, then prefetches (the paper's combined variant).
+``um_prefetch_pipelined``
+                  beyond-paper (DESIGN.md §11): capacity-aware pipelined
+                  prefetch — per-kernel-step windows bounded by free +
+                  safely-evictable capacity, replayed on the async copy
+                  stream so copies overlap the previous step's compute;
+                  avoids the staged variant's self-eviction under
+                  oversubscription.  Available on all platforms.
+``um_both_pipelined``
+                  advises, then the pipelined prefetch schedule.
 ``svm_remote``    beyond-paper (PAPERS.md: *Shared Virtual Memory: Its Design
                   and Performance Implications for Diverse Applications*): an
                   always-coherent, remote-access-only tier.  Data stays in
@@ -92,7 +101,8 @@ class VariantStrategy:
         if pre:
             self._issue_advises(sim, pre)
         self.stage(sim, workload)
-        for step in workload.compute:
+        for idx, step in enumerate(workload.compute):
+            self.before_step(sim, workload, idx, step)
             if isinstance(step, wk.KernelStep):
                 sim.kernel(step.name, flops=step.flops, reads=list(step.reads),
                            writes=list(step.writes),
@@ -118,6 +128,12 @@ class VariantStrategy:
 
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         """Called once, between host initialization and the first kernel."""
+
+    def before_step(self, sim: UMSimulator, workload: wk.Workload,
+                    idx: int, step: wk.ComputeStep) -> None:
+        """Called immediately before each compute step — the pipelined
+        prefetch schedulers issue their per-step windows here so the copies
+        overlap the previous step's compute (DESIGN.md §11)."""
 
     def read_result(self, sim: UMSimulator, name: str) -> None:
         sim.host_read(name)
@@ -191,6 +207,74 @@ class UMBothStrategy(UMAdviseStrategy):
         super().stage(sim, workload)
         for nm in workload.prefetch:
             sim.prefetch(nm)
+
+
+class PipelinedScheduleMixin:
+    """The §11 schedule lowering, shared by the pipelined tiers: derive (or
+    degenerate to) a :class:`~repro.umbench.schedule.PrefetchPlan`, replay
+    its staging-anchored windows at the staging point and each per-step
+    window in ``before_step`` so the copies overlap the anchor step's
+    compute.
+
+    ``staged=True`` selects the degenerate single-window schedule (the
+    whole candidate list at the staging point) — bit-identical to
+    ``um_prefetch`` by construction, which is how the mechanism is pinned
+    without new seed-model code (tests/test_prefetch_schedule.py).
+    ``lookahead`` overrides the workload's ``prefetch_lookahead`` depth."""
+
+    lookahead: int | None = None
+    staged: bool = False
+
+    def plan(self, workload: wk.Workload, sim: UMSimulator):
+        from repro.umbench import schedule
+        if self.staged:
+            return schedule.staged_plan(workload)
+        return schedule.derive_plan(workload, sim.device_capacity,
+                                    sim.chunk_bytes, self.lookahead)
+
+    def issue_staging(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        from repro.umbench import schedule
+        self.plan(workload, sim).issue(sim, schedule.STAGING)
+
+    def before_step(self, sim: UMSimulator, workload: wk.Workload,
+                    idx: int, step: wk.ComputeStep) -> None:
+        self.plan(workload, sim).issue(sim, idx)
+
+
+class UMPrefetchPipelinedStrategy(PipelinedScheduleMixin, VariantStrategy):
+    """Capacity-aware pipelined prefetch (DESIGN.md §11): instead of one
+    monolithic ``cudaMemPrefetchAsync`` of every candidate at the staging
+    point — which under oversubscription *self-evicts* (the tail of the
+    bulk copy evicts the head before the first kernel runs) — the schedule
+    module derives per-kernel-step prefetch windows bounded by
+    free-plus-safely-evictable capacity, and this strategy replays them."""
+
+    name = "um_prefetch_pipelined"
+
+    def __init__(self, lookahead: int | None = None, staged: bool = False):
+        self.lookahead = lookahead
+        self.staged = staged
+
+    def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        self.issue_staging(sim, workload)
+
+
+class UMBothPipelinedStrategy(PipelinedScheduleMixin, UMAdviseStrategy):
+    """Advises plus the capacity-aware pipelined prefetch schedule — the
+    pipelined counterpart of ``um_both`` (advise staging from
+    :class:`UMAdviseStrategy`, windows from the mixin)."""
+
+    name = "um_both_pipelined"
+
+    def __init__(self, policy: AdvisePolicy | None = None,
+                 lookahead: int | None = None, staged: bool = False):
+        super().__init__(policy)
+        self.lookahead = lookahead
+        self.staged = staged
+
+    def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
+        UMAdviseStrategy.stage(self, sim, workload)
+        self.issue_staging(sim, workload)
 
 
 class SVMRemoteStrategy(VariantStrategy):
@@ -282,5 +366,6 @@ def strategy_names() -> tuple[str, ...]:
 
 for _s in (ExplicitStrategy(), UMStrategy(), UMAdviseStrategy(),
            UMPrefetchStrategy(), UMBothStrategy(), SVMRemoteStrategy(),
-           UMHybridCountersStrategy(), UMPinnedZeroCopyStrategy()):
+           UMHybridCountersStrategy(), UMPinnedZeroCopyStrategy(),
+           UMPrefetchPipelinedStrategy(), UMBothPipelinedStrategy()):
     register(_s)

@@ -88,6 +88,11 @@ class KernelStep:
     ``partial`` maps region name -> fraction in (0, 1] touched this launch
     (data-dependent access, e.g. a BFS frontier sweep); stored as an items
     tuple so the step stays hashable.
+
+    ``prefetch`` optionally names this step's prefetch candidates for the
+    pipelined scheduler (DESIGN.md §11).  Empty means "derive from the read
+    set": the scheduler uses the step's reads+writes intersected with the
+    workload-level ``prefetch`` candidate list, in access order.
     """
 
     name: str
@@ -96,9 +101,23 @@ class KernelStep:
     writes: tuple[str, ...]
     bytes_touched: float | None = None
     partial: tuple[tuple[str, float], ...] = ()
+    prefetch: tuple[str, ...] = ()
 
     def partial_map(self) -> dict[str, float] | None:
         return dict(self.partial) if self.partial else None
+
+    def prefetch_candidates(self, pool: tuple[str, ...]) -> tuple[str, ...]:
+        """This step's prefetch candidates: the explicit per-step list, or
+        the read-set-derived default — touched regions that are in the
+        workload-level candidate ``pool``, in access order, deduplicated."""
+        if self.prefetch:
+            return self.prefetch
+        allowed = set(pool)
+        seen: list[str] = []
+        for n in self.reads + self.writes:
+            if n in allowed and n not in seen:
+                seen.append(n)
+        return tuple(seen)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +154,10 @@ class Workload:
     teardown: tuple[TeardownStep, ...]
     advises: tuple[AdviseHint, ...] = ()
     prefetch: tuple[str, ...] = ()
+    # how many kernel steps ahead the pipelined scheduler may stage a
+    # step's candidates (DESIGN.md §11); 1 = overlap with the previous
+    # step's compute only
+    prefetch_lookahead: int = 1
 
     def allocs(self) -> tuple[Alloc, ...]:
         return tuple(s for s in self.setup if isinstance(s, Alloc))
@@ -194,11 +217,15 @@ class Workload:
         for s in self.setup + self.compute + self.teardown:
             if isinstance(s, KernelStep):
                 check(f"kernel {s.name}", s.reads + s.writes
-                      + tuple(n for n, _ in s.partial))
+                      + tuple(n for n, _ in s.partial) + s.prefetch)
             elif isinstance(s, (HostWrite, HostRead, ReadBack)):
                 check(type(s).__name__, (s.name,))
         check("prefetch", self.prefetch)
         check("advise", (h.name for h in self.advises))
+        if self.prefetch_lookahead < 1:
+            raise ValueError(
+                f"{self.name}: prefetch_lookahead must be >= 1, got "
+                f"{self.prefetch_lookahead}")
         return self
 
 
@@ -220,6 +247,7 @@ class WorkloadBuilder:
         self._steps: list = []
         self._advises: list[AdviseHint] = []
         self._prefetch: list[str] = []
+        self._lookahead = 1
         self._saw_kernel = False
 
     # -- trace steps -----------------------------------------------------------
@@ -243,11 +271,12 @@ class WorkloadBuilder:
 
     def kernel(self, name: str, *, flops: float, reads: Iterable[str],
                writes: Iterable[str], bytes_touched: float | None = None,
-               partial: Mapping[str, float] | None = None) -> "WorkloadBuilder":
+               partial: Mapping[str, float] | None = None,
+               prefetch: Iterable[str] | None = None) -> "WorkloadBuilder":
         self._saw_kernel = True
         self._steps.append(KernelStep(
             name, float(flops), tuple(reads), tuple(writes), bytes_touched,
-            tuple((partial or {}).items())))
+            tuple((partial or {}).items()), tuple(prefetch or ())))
         return self
 
     # -- hints -----------------------------------------------------------------
@@ -270,6 +299,12 @@ class WorkloadBuilder:
         self._prefetch.extend(names)
         return self
 
+    def prefetch_lookahead(self, depth: int) -> "WorkloadBuilder":
+        """Pipelined-scheduler lookahead: a kernel step's candidates may be
+        staged up to ``depth`` kernel steps ahead of their use."""
+        self._lookahead = int(depth)
+        return self
+
     # -- assembly --------------------------------------------------------------
     def build(self) -> Workload:
         first_kernel = next(
@@ -290,6 +325,7 @@ class WorkloadBuilder:
             teardown=tuple(self._steps[tail:]),
             advises=tuple(self._advises),
             prefetch=tuple(self._prefetch),
+            prefetch_lookahead=self._lookahead,
         ).validate()
 
 

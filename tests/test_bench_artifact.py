@@ -173,6 +173,7 @@ def test_committed_bench_has_page_block_and_pooled_sweep():
 # page-granularity sweep block + wall-clock budgets
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_page_smoke_cell_fault_explosion():
     """One app x two platforms x um_advise at 64 KB pages (the CI smoke
     cell): the coherent fabric explodes fault counts under pressure, PCIe
@@ -206,6 +207,7 @@ def test_matrix_240_wall_budget():
     assert wall < SEED_BASELINE_MATRIX_240_S / 3, wall
 
 
+@pytest.mark.slow
 def test_page_heavy_cell_wall_budget():
     """The heaviest coherent-fabric page-mode class stays runnable: one
     full-region p9 oversubscribed advise cell in seconds, not minutes."""

@@ -38,6 +38,8 @@ GATES = {
     "um_hybrid_counters": lambda p: (p.host_can_access_device
                                      and p.device_can_access_host),
     "um_pinned_zero_copy": lambda p: p.device_can_access_host,
+    "um_prefetch_pipelined": lambda p: True,
+    "um_both_pipelined": lambda p: True,
 }
 
 

@@ -14,51 +14,52 @@ def speedups():
 def test_claim1_intel_oversubscribed_advise_wins(speedups):
     """'advises result in up to 25% improvement [oversubscribed] on Intel'"""
     for plat in ("intel-pascal-pcie", "intel-volta-pcie"):
-        s = speedups[("bs", plat, "oversubscribed", "um_advise")]
+        s = speedups[("bs", plat, "oversubscribed", "um_advise", "group")]
         assert 1.10 <= s <= 1.6, s
-        assert speedups[("conv1", plat, "oversubscribed", "um_advise")] > 1.3
+        assert speedups[("conv1", plat, "oversubscribed", "um_advise", "group")] > 1.3
 
 
 def test_claim2_p9_in_memory_advise_wins(speedups):
     """'34%+ performance gain for in-memory executions on P9' (CG/FDTD via
     remote initialization through the coherent fabric)."""
-    assert speedups[("cg", "p9-volta-nvlink", "in_memory", "um_advise")] > 1.3
-    assert speedups[("fdtd3d", "p9-volta-nvlink", "in_memory", "um_advise")] > 1.3
+    assert speedups[("cg", "p9-volta-nvlink", "in_memory", "um_advise", "group")] > 1.3
+    assert speedups[("fdtd3d", "p9-volta-nvlink", "in_memory", "um_advise", "group")] > 1.3
 
 
 def test_claim3_p9_oversubscribed_advise_degrades(speedups):
     """'on P9, advises [oversubscribed] result in considerable performance
     loss' — ~3x on the traced apps."""
-    assert speedups[("bs", "p9-volta-nvlink", "oversubscribed", "um_advise")] < 0.5
-    assert speedups[("cg", "p9-volta-nvlink", "oversubscribed", "um_advise")] < 0.5
+    assert speedups[("bs", "p9-volta-nvlink", "oversubscribed", "um_advise", "group")] < 0.5
+    assert speedups[("cg", "p9-volta-nvlink", "oversubscribed", "um_advise", "group")] < 0.5
 
 
 def test_claim4_prefetch_platform_contrast(speedups):
     """'prefetch improves up to 50% on Intel... little benefit on P9'"""
     for app in ("bs", "cg", "fdtd3d"):
-        intel = speedups[(app, "intel-volta-pcie", "in_memory", "um_prefetch")]
-        p9 = speedups[(app, "p9-volta-nvlink", "in_memory", "um_prefetch")]
+        intel = speedups[(app, "intel-volta-pcie", "in_memory", "um_prefetch", "group")]
+        p9 = speedups[(app, "p9-volta-nvlink", "in_memory", "um_prefetch", "group")]
         assert intel > p9, (app, intel, p9)
-    assert speedups[("cg", "intel-volta-pcie", "in_memory", "um_prefetch")] > 1.5
+    assert speedups[("cg", "intel-volta-pcie", "in_memory", "um_prefetch", "group")] > 1.5
 
 
 def test_claim5_um_overhead_vs_explicit(speedups):
     """'execution of [conv/FDTD] using UM is 2-3x slower than explicit' on
     Intel-Pascal; larger on Volta platforms."""
-    assert speedups[("fdtd3d", "intel-pascal-pcie", "in_memory", "explicit")] > 1.5
-    assert speedups[("conv1", "intel-volta-pcie", "in_memory", "explicit")] > 2.0
+    assert speedups[("fdtd3d", "intel-pascal-pcie", "in_memory", "explicit", "group")] > 1.5
+    assert speedups[("conv1", "intel-volta-pcie", "in_memory", "explicit", "group")] > 2.0
 
 
 def test_explicit_na_when_oversubscribed(speedups):
     """'a comparison is not possible [explicit, oversubscribed]'"""
-    assert ("bs", "intel-pascal-pcie", "oversubscribed", "explicit") not in speedups
+    assert ("bs", "intel-pascal-pcie", "oversubscribed", "explicit",
+            "group") not in speedups
 
 
 def test_advise_prefetch_combination_in_memory(speedups):
     """'advise+prefetch together generally outperforms either alone' —
     checked on the P9 conv apps the paper highlights."""
     for app in ("conv0", "conv1", "conv2"):
-        both = speedups[(app, "p9-volta-nvlink", "in_memory", "um_both")]
-        adv = speedups[(app, "p9-volta-nvlink", "in_memory", "um_advise")]
-        pre = speedups[(app, "p9-volta-nvlink", "in_memory", "um_prefetch")]
+        both = speedups[(app, "p9-volta-nvlink", "in_memory", "um_both", "group")]
+        adv = speedups[(app, "p9-volta-nvlink", "in_memory", "um_advise", "group")]
+        pre = speedups[(app, "p9-volta-nvlink", "in_memory", "um_prefetch", "group")]
         assert both >= max(adv, pre) - 0.05, (app, both, adv, pre)

@@ -1,0 +1,401 @@
+"""Capacity-aware pipelined prefetch scheduling (ISSUE 5, DESIGN.md §11).
+
+Four layers:
+
+* the **mechanism oracle**: lowering the degenerate single-window schedule
+  (the whole candidate list at the staging point) through
+  ``um_prefetch_pipelined`` must be bit-identical to the oracle-backed
+  ``um_prefetch`` variant on every seed-matrix cell — counters exact,
+  times to 1e-9 — so the new subsystem is pinned with zero new seed-model
+  code (the same discipline that pinned the §10 counter tiers);
+* the **prefetch-to-host duplicate leak** regression (red on the pre-fix
+  simulator): dropping READ_MOSTLY duplicates must release device memory
+  and the residency-index entries, with no DtoH traffic;
+* **prefetch/eviction interaction**: the staged bulk prefetch self-evicts
+  under ``oversubscribed_2x`` — asserted against the seed oracle via
+  ``residency_snapshot()`` — and the derived plan's capacity bound keeps
+  windows inside free-plus-safely-evictable bytes;
+* **overlap accounting**: ``prefetch_copy_s`` / ``prefetch_wait_s`` /
+  ``prefetch_overlap_s`` behave as defined (copy time hidden under
+  compute).
+"""
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.core import seed_simulator
+from repro.core.advise import MemorySpace
+from repro.core.simulator import GB, MB, UMSimulator
+from repro.umbench import platforms as plat
+from repro.umbench import schedule
+from repro.umbench.harness import (
+    DEFAULT_PLATFORMS,
+    DEFAULT_REGIMES,
+    REGIMES,
+    WORKLOADS,
+    run_cell,
+)
+from repro.umbench.variants import (
+    UMBothPipelinedStrategy,
+    UMPrefetchPipelinedStrategy,
+    get_strategy,
+)
+from repro.umbench.workload import WorkloadBuilder
+
+
+def _assert_reports_identical(got, want, ctx):
+    """Every SimReport field: counters exact, times <= 1e-9 relative."""
+    g, w = dataclasses.asdict(got), dataclasses.asdict(want)
+    assert g.keys() == w.keys()
+    for k in g:
+        if isinstance(w[k], int):
+            assert g[k] == w[k], (*ctx, k, g[k], w[k])
+        else:
+            assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), (
+                *ctx, k, g[k], w[k])
+
+
+# ---------------------------------------------------------------------------
+# the mechanism oracle: degenerate single-window schedule == um_prefetch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pname", DEFAULT_PLATFORMS)
+@pytest.mark.parametrize("regime", DEFAULT_REGIMES)
+def test_degenerate_window_matches_um_prefetch_seed_matrix(pname, regime):
+    """One (platform, regime) slab of the seed matrix; together the
+    parametrized cases cover every seed-matrix cell for both prefetch
+    pairs (um_prefetch and um_both)."""
+    pairs = [("um_prefetch", UMPrefetchPipelinedStrategy(staged=True)),
+             ("um_both", UMBothPipelinedStrategy(staged=True))]
+    for app, (base, degenerate) in itertools.product(WORKLOADS, pairs):
+        want = run_cell(app, base, pname, regime).report
+        got = run_cell(app, degenerate, pname, regime).report
+        _assert_reports_identical(got, want, (app, pname, regime, base))
+
+
+def test_degenerate_window_matches_extended_sample():
+    for pname, regime in [("grace-hopper-c2c", "oversubscribed"),
+                          ("intel-pascal-pcie", "oversubscribed_2x"),
+                          ("p9-volta-nvlink", "oversubscribed_2x")]:
+        want = run_cell("cg", "um_prefetch", pname, regime).report
+        got = run_cell("cg", UMPrefetchPipelinedStrategy(staged=True),
+                       pname, regime).report
+        _assert_reports_identical(got, want, ("cg", pname, regime))
+
+
+def test_staged_plan_shape():
+    wl = WORKLOADS["cg"](4 * GB)
+    plan = schedule.staged_plan(wl)
+    assert plan.anchors() == (schedule.STAGING,)
+    assert [i.name for i in plan.at(schedule.STAGING)] == list(wl.prefetch)
+    assert all(i.nbytes is None for i in plan.at(schedule.STAGING))
+
+
+# ---------------------------------------------------------------------------
+# prefetch-to-host duplicate leak (red on the pre-fix simulator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["vectorized", "seed"])
+def test_prefetch_to_host_drops_read_mostly_duplicates(engine):
+    """READ_MOSTLY duplication then cudaMemPrefetchAsync back to the host:
+    the duplicates must be dropped as free evictions — device_used back to
+    zero, residency index emptied, no DtoH traffic — instead of silently
+    surviving (the pre-fix no-op selected on_device chunks only)."""
+    mk = UMSimulator if engine == "vectorized" else seed_simulator.UMSimulator
+    sim = mk(plat.INTEL_PASCAL)
+    sim.alloc("a", 16 * MB)
+    sim.host_write("a")
+    sim.advise_read_mostly("a")
+    sim.kernel("k", flops=1e6, reads=["a"], writes=[])
+    nch = sim.regions["a"].nchunks
+    assert sim.device_used == 16 * MB
+    assert len(sim.residency_snapshot()) == nch
+    sim.prefetch("a", dst=MemorySpace.HOST)
+    assert sim.device_used == 0
+    assert sim.residency_snapshot() == []
+    assert sim.report.n_dropped == nch
+    assert sim.report.dtoh_bytes == 0          # host copy was valid: no move
+    if engine == "vectorized":
+        assert not sim.regions["a"].duplicated.any()
+        sim._debug_validate()
+
+
+def test_prefetch_to_host_mixed_duplicates_and_moved():
+    """A region whose chunks are part duplicated (read-mostly fault path)
+    and part moved (written by a kernel): prefetch-to-host drops the
+    duplicates free and pays DtoH only for the moved chunks; both engines
+    agree snapshot-for-snapshot."""
+    def build(mk):
+        sim = mk(plat.INTEL_PASCAL)
+        sim.alloc("a", 16 * MB)
+        sim.alloc("out", 8 * MB)
+        sim.host_write("a")
+        sim.advise_read_mostly("a")
+        sim.kernel("k", flops=1e6, reads=["a"], writes=["out"])
+        sim.prefetch("a", dst=MemorySpace.HOST)
+        sim.prefetch("out", dst=MemorySpace.HOST)
+        return sim
+    vec, seed = build(UMSimulator), build(seed_simulator.UMSimulator)
+    assert vec.residency_snapshot() == seed.residency_snapshot() == []
+    assert vec.device_used == seed.device_used == 0
+    # "a" dropped free; "out" was populated device-side by the kernel write
+    # (virgin populate — authoritative copy on device), so it moves
+    assert vec.report.n_dropped == seed.report.n_dropped == 8
+    assert vec.report.dtoh_bytes == seed.report.dtoh_bytes == 8 * MB
+    vec._debug_validate()
+
+
+# ---------------------------------------------------------------------------
+# prefetch/eviction interaction under oversubscription
+# ---------------------------------------------------------------------------
+
+def test_staged_prefetch_self_evicts_oversubscribed_2x_vs_seed_oracle():
+    """The monolithic staging-point prefetch under the 200 % regime evicts
+    its own head before any kernel runs — the exact failure mode the
+    pipelined scheduler exists to avoid.  Both engines agree on the
+    post-staging residency (residency_snapshot) and the final report."""
+    total = REGIMES["oversubscribed_2x"] * plat.INTEL_PASCAL.device_mem_gb * GB
+    wl = WORKLOADS["bs"](total)
+    strat = get_strategy("um_prefetch")
+
+    sims = (UMSimulator(plat.INTEL_PASCAL),
+            seed_simulator.UMSimulator(plat.INTEL_PASCAL))
+    for sim in sims:
+        for step in wl.setup:
+            if hasattr(step, "nbytes") and not hasattr(step, "role"):
+                sim.host_write(step.name, step.nbytes)
+            else:
+                sim.alloc(step.name, step.nbytes, role=step.role)
+        strat.stage(sim, wl)
+        # the staged bulk copy exceeded capacity: it evicted chunks of the
+        # very candidate list it was staging, before the first kernel
+        assert sim.report.n_evictions > 0
+        assert sim.device_used <= sim.device_capacity
+    vec, seed = sims
+    assert vec.residency_snapshot() == seed.residency_snapshot()
+    assert vec.report.n_evictions == seed.report.n_evictions
+    assert vec.report.htod_bytes == seed.report.htod_bytes
+    # evicted prefetched inputs are refaulted by the kernels: the staged
+    # schedule moves strictly more HtoD bytes than the device can hold
+    assert vec.report.htod_bytes > vec.device_capacity
+
+
+def test_pipelined_beats_staged_and_um_under_oversubscription():
+    """The capacity-aware schedule never self-evicts, so oversubscribed it
+    beats the staged prefetch (which pays the wasted head copy) on the
+    PCIe platforms the paper's §II-C results target."""
+    for pname in ("intel-pascal-pcie", "intel-volta-pcie"):
+        for regime in ("oversubscribed", "oversubscribed_2x"):
+            um = run_cell("cg", "um", pname, regime).report
+            staged = run_cell("cg", "um_prefetch", pname, regime).report
+            piped = run_cell("cg", "um_prefetch_pipelined", pname,
+                             regime).report
+            assert piped.total_s < staged.total_s, (pname, regime)
+            assert piped.total_s < um.total_s, (pname, regime)
+
+
+def test_pipelined_wins_in_memory_too():
+    """In-memory the windowed schedule still beats staging everything up
+    front: the first kernel only waits for its own candidates, later
+    candidates arrive behind earlier compute."""
+    staged = run_cell("cg", "um_prefetch", "intel-volta-pcie",
+                      "in_memory").report
+    piped = run_cell("cg", "um_prefetch_pipelined", "intel-volta-pcie",
+                     "in_memory").report
+    assert piped.total_s <= staged.total_s
+    assert piped.prefetch_overlap_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# plan derivation: capacity bound and protected regions
+# ---------------------------------------------------------------------------
+
+def _two_phase_workload(big: int, chunk: int):
+    """Kernel 1 streams region A; kernel 2 streams region B; both are
+    prefetch candidates.  With capacity ~= one region, B's window must not
+    evict A (kernel 1 still reads it at the window's anchor)."""
+    w = WorkloadBuilder("two_phase")
+    w.alloc("A", big).alloc("B", big)
+    w.host_write("A").host_write("B")
+    w.prefetch("A", "B")
+    w.kernel("k1", flops=1.0, reads=("A",), writes=())
+    w.kernel("k2", flops=1.0, reads=("B",), writes=())
+    return w.build()
+
+
+def test_plan_window_protects_nearer_steps_reads():
+    chunk = 2 * MB
+    big = 100 * chunk
+    wl = _two_phase_workload(big, chunk)
+    capacity = 120 * chunk
+    plan = schedule.derive_plan(wl, capacity, chunk)
+    # staging window (kernel 1's candidates): A in full
+    staging = {i.name: i.nbytes for i in plan.at(schedule.STAGING)}
+    assert staging == {"A": None}
+    # kernel 2's candidate B is planned at kernel 1's anchor, overlapping
+    # k1's compute — but evicting A to fit more of B is forbidden there
+    # (kernel 1, a nearer step, still reads A), so B is cut to the 20 free
+    # chunks and the rest faults on demand
+    k1_anchor = {i.name: i.nbytes for i in plan.at(0)}
+    assert k1_anchor == {"B": 20 * chunk}
+
+
+def test_plan_never_exceeds_capacity_across_matrix():
+    """Static replay of every derived plan: planned resident bytes stay
+    within device capacity at every window (the §11 bound)."""
+    for app, pname, regime in itertools.product(
+            WORKLOADS, ("intel-pascal-pcie", "p9-volta-nvlink"),
+            ("in_memory", "oversubscribed", "oversubscribed_2x")):
+        p = plat.PLATFORMS[pname]
+        capacity = int(p.device_mem_gb * GB)
+        wl = WORKLOADS[app](REGIMES[regime] * capacity)
+        plan = schedule.derive_plan(wl, capacity, p.fault_group_bytes)
+        sizes = {a.name: a.nbytes for a in wl.allocs()}
+        planned: dict[str, int] = {}
+        for w in plan.windows:
+            for item in w.items:
+                planned[item.name] = (sizes[item.name] if item.nbytes is None
+                                      else item.nbytes)
+            # a single window's cumulative planned bytes can never exceed
+            # what the device can hold
+            assert sum(planned.values()) <= capacity + len(planned) * 0, (
+                app, pname, regime, w.anchor)
+        assert all(0 < b <= sizes[n] for n, b in planned.items())
+
+
+def test_plan_cuts_on_chunk_boundaries():
+    chunk = 2 * MB
+    wl = _two_phase_workload(100 * chunk, chunk)
+    plan = schedule.derive_plan(wl, 120 * chunk + chunk // 2, chunk)
+    for w in plan.windows:
+        for item in w.items:
+            if item.nbytes is not None:
+                assert item.nbytes % chunk == 0, (w.anchor, item)
+
+
+def test_plan_empty_without_candidates_or_kernels():
+    w = WorkloadBuilder("nope")
+    w.alloc("A", 4 * MB).host_write("A")
+    w.kernel("k", flops=1.0, reads=("A",), writes=())
+    assert schedule.derive_plan(w.build(), GB, 2 * MB).windows == ()
+
+
+def test_kernel_step_candidates_and_lookahead_builder():
+    w = WorkloadBuilder("cands")
+    w.alloc("A", 4 * MB).alloc("B", 4 * MB).alloc("C", 4 * MB)
+    w.host_write("A").host_write("B").host_write("C")
+    w.prefetch("A", "B")
+    w.prefetch_lookahead(2)
+    w.kernel("k1", flops=1.0, reads=("A", "C"), writes=())
+    w.kernel("k2", flops=1.0, reads=("C",), writes=(), prefetch=("B",))
+    wl = w.build()
+    assert wl.prefetch_lookahead == 2
+    k1, k2 = [s for s in wl.compute]
+    # derived: touched  pool; explicit list wins verbatim
+    assert k1.prefetch_candidates(wl.prefetch) == ("A",)
+    assert k2.prefetch_candidates(wl.prefetch) == ("B",)
+
+
+def test_workload_validate_rejects_bad_lookahead_and_unknown_prefetch():
+    w = WorkloadBuilder("bad")
+    w.alloc("A", 4 * MB).host_write("A")
+    w.kernel("k", flops=1.0, reads=("A",), writes=(), prefetch=("ghost",))
+    with pytest.raises(ValueError, match="ghost"):
+        w.build()
+    w2 = WorkloadBuilder("bad2")
+    w2.alloc("A", 4 * MB).host_write("A")
+    w2.prefetch_lookahead(0)
+    w2.kernel("k", flops=1.0, reads=("A",), writes=())
+    with pytest.raises(ValueError, match="prefetch_lookahead"):
+        w2.build()
+
+
+def test_prefetch_nbytes_limits_chunks():
+    sim = UMSimulator(plat.INTEL_PASCAL)
+    sim.alloc("a", 16 * MB)
+    sim.host_write("a")
+    sim.prefetch("a", nbytes=5 * MB)           # ceil to 3 of 8 x 2 MB chunks
+    assert int(sim.regions["a"].resident_mask().sum()) == 3
+    assert sim.report.htod_bytes == 6 * MB
+    sim.prefetch("a", nbytes=16 * MB)          # the rest, no double copy
+    assert int(sim.regions["a"].resident_mask().sum()) == 8
+    assert sim.report.htod_bytes == 16 * MB
+    sim._debug_validate()
+
+
+def test_plan_replays_on_seed_engine():
+    """PrefetchPlan.issue works against the seed oracle too (prefetch's
+    nbytes limit mirrors the vectorized engine), so schedules can be
+    replayed on either engine; both agree counter-for-counter."""
+    wl = _two_phase_workload(6 * MB, 2 * MB)
+    capacity = 8 * MB
+    plan = schedule.derive_plan(wl, capacity, 2 * MB)
+    sims = (UMSimulator(plat.INTEL_PASCAL),
+            seed_simulator.UMSimulator(plat.INTEL_PASCAL))
+    for sim in sims:
+        sim.alloc("A", 6 * MB)
+        sim.alloc("B", 6 * MB)
+        sim.host_write("A")
+        sim.host_write("B")
+        plan.issue(sim, schedule.STAGING)
+        plan.issue(sim, 0)
+    vec, seed = sims
+    assert vec.residency_snapshot() == seed.residency_snapshot()
+    assert vec.report.htod_bytes == seed.report.htod_bytes
+    assert vec.device_used == seed.device_used <= capacity
+
+
+# ---------------------------------------------------------------------------
+# overlap accounting
+# ---------------------------------------------------------------------------
+
+def test_overlap_accounting_fields():
+    """copy = wait + overlap for prefetch-only lowerings; variants without
+    prefetch never populate the fields."""
+    um = run_cell("bs", "um", "intel-volta-pcie", "in_memory").report
+    assert um.prefetch_copy_s == um.prefetch_wait_s == 0.0
+    assert um.prefetch_overlap_s == 0.0
+    # eager-restore ping-pong (advise + oversubscription on a coherent
+    # fabric) also runs async copies kernels wait on — those stalls are
+    # NOT prefetch waits and must not leak into the §11 fields
+    adv = run_cell("cg", "um_advise", "p9-volta-nvlink",
+                   "oversubscribed").report
+    assert adv.prefetch_copy_s == adv.prefetch_wait_s == 0.0
+    staged = run_cell("cg", "um_prefetch", "intel-volta-pcie",
+                      "in_memory").report
+    assert staged.prefetch_copy_s > 0.0
+    assert staged.prefetch_overlap_s == pytest.approx(
+        max(0.0, staged.prefetch_copy_s - staged.prefetch_wait_s))
+    piped = run_cell("cg", "um_prefetch_pipelined", "intel-volta-pcie",
+                     "in_memory").report
+    # the windowed schedule hides copy time the staged schedule exposes
+    assert piped.prefetch_wait_s < staged.prefetch_wait_s
+
+
+def test_prefetch_attribution_cleared_when_chunks_leave_device():
+    """Chunks that leave the device by any path (not just eviction) must
+    forget their prefetch attribution — a later non-prefetch async
+    re-install (eager restore) is not a prefetch wait."""
+    sim = UMSimulator(plat.P9_VOLTA)
+    sim.alloc("a", 16 * MB)
+    sim.host_write("a")
+    sim.advise_read_mostly("a")
+    sim.prefetch("a")                       # duplicates, pf_mark set
+    r = sim.regions["a"]
+    assert r.pf_mark is not None and r.pf_mark.all()
+    sim.host_write("a")                     # invalidates the duplicates
+    assert not r.pf_mark.any()
+    sim.prefetch("a")                       # moved copies this time
+    assert r.pf_mark.all()
+    sim.prefetch("a", dst=MemorySpace.HOST)
+    assert not r.pf_mark.any()
+    sim._debug_validate()
+
+
+def test_row_carries_overlap_columns():
+    row = run_cell("cg", "um_prefetch_pipelined", "intel-volta-pcie",
+                   "in_memory").row()
+    for k in ("prefetch_copy_s", "prefetch_wait_s", "prefetch_overlap_s"):
+        assert k in row
+    assert row["variant"] == "um_prefetch_pipelined"

@@ -90,6 +90,7 @@ def _random_runs(rng, max_runs=4, max_count=12):
     return (np.array(sizes, dtype=np.int64), np.array(counts, dtype=np.int64))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(200))
 def test_merge_runs_matches_chunk_reference_random(seed):
     rng = random.Random(seed)
@@ -138,6 +139,7 @@ def test_merge_runs_pin_then_own_priority():
     assert n_pin == 1 and n_own == 9          # one pin pop, then self-thrash
 
 
+@pytest.mark.slow
 @settings(max_examples=300, deadline=None)
 @given(
     own=st.lists(st.tuples(st.integers(1, 9), st.integers(1, 15)),
@@ -224,6 +226,7 @@ def _apply(sim, op):
         sim.prefetch(op[1], op[2])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(120))
 def test_index_pop_order_tracks_seed_queues(seed):
     """After every op of a random trace, the vectorized engine's
@@ -251,6 +254,7 @@ def test_index_pop_order_tracks_seed_queues(seed):
             break
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(40))
 def test_index_counters_track_seed_through_scenarios(seed):
     """Full-report parity on random traces (counter-exact, 1e-9 times)."""

@@ -7,6 +7,10 @@ import sys
 
 import pytest
 
+# one multi-minute XLA compile in the module fixture dominates tier-1 wall
+# clock on small containers
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -28,7 +28,8 @@ def test_extended_matrix_definitions():
     )
     assert EXTENDED_VARIANTS == VARIANTS + BEYOND_PAPER_VARIANTS
     assert BEYOND_PAPER_VARIANTS == (
-        "svm_remote", "um_hybrid_counters", "um_pinned_zero_copy")
+        "svm_remote", "um_hybrid_counters", "um_pinned_zero_copy",
+        "um_prefetch_pipelined", "um_both_pipelined")
 
 
 def test_grace_hopper_from_run_matrix():
@@ -39,8 +40,8 @@ def test_grace_hopper_from_run_matrix():
                      regimes=("in_memory", "oversubscribed"),
                      variants=("um", "um_advise"))
     sp = speedup_vs_um(res)
-    assert sp[("cg", "grace-hopper-c2c", "in_memory", "um_advise")] > 1.3
-    assert sp[("cg", "grace-hopper-c2c", "oversubscribed", "um_advise")] < 0.5
+    assert sp[("cg", "grace-hopper-c2c", "in_memory", "um_advise", "group")] > 1.3
+    assert sp[("cg", "grace-hopper-c2c", "oversubscribed", "um_advise", "group")] < 0.5
 
 
 def test_200pct_regime_from_run_matrix():
@@ -67,7 +68,7 @@ def test_page_granularity_from_run_matrix():
                      variants=("um", "um_advise"), granularity="page")
     assert all(r.granularity == "page" for r in res)
     sp = speedup_vs_um(res)
-    assert sp[("bs", "p9-volta-nvlink", "oversubscribed", "um_advise")] < 0.5
+    assert sp[("bs", "p9-volta-nvlink", "oversubscribed", "um_advise", "page")] < 0.5
     page = next(r for r in res if r.variant == "um_advise").report
     group = run_cell("bs", "um_advise", plat.P9_VOLTA, "oversubscribed").report
     assert page.n_faults == pytest.approx(group.n_faults, rel=0.01)

@@ -232,7 +232,7 @@ def test_svm_remote_access_vs_migrate_tradeoff():
     sp = speedup_vs_um(run_matrix(
         apps=["bs"], platform_names=("p9-volta-nvlink",),
         regimes=("in_memory",), variants=("um", "svm_remote")))
-    assert sp[("bs", "p9-volta-nvlink", "in_memory", "svm_remote")] < 1.0
+    assert sp[("bs", "p9-volta-nvlink", "in_memory", "svm_remote", "group")] < 1.0
 
 
 def test_svm_remote_in_extended_sweep_table(monkeypatch):
@@ -274,14 +274,33 @@ def test_speedup_vs_um_skips_na_and_zero_total():
         _cell("um_prefetch", total=0.0),          # zero-total: excluded
     ]
     sp = speedup_vs_um(cells)
-    assert sp[("app", "plat", "in_memory", "um_advise")] == 2.0
-    assert ("app", "plat", "in_memory", "explicit") not in sp
-    assert ("app", "plat", "in_memory", "um_prefetch") not in sp
+    assert sp[("app", "plat", "in_memory", "um_advise", "group")] == 2.0
+    assert ("app", "plat", "in_memory", "explicit", "group") not in sp
+    assert ("app", "plat", "in_memory", "um_prefetch", "group") not in sp
 
 
 def test_speedup_vs_um_skips_zero_um_baseline():
     cells = [_cell("um", total=0.0), _cell("um_advise", total=1.0)]
     assert speedup_vs_um(cells) == {}
+
+
+def test_speedup_vs_um_keys_mixed_granularity_list():
+    """A concatenated extended+page result list (how benchmarks/run.py
+    assembles the artifact) must divide each cell by the ``um`` baseline of
+    the SAME granularity — the pre-fix key dropped granularity, so the
+    page-mode baseline silently overwrote the group-mode one (last write
+    wins) and group cells were divided by page totals."""
+    cells = [
+        _cell("um", total=2.0),
+        _cell("um_advise", total=1.0),
+        _cell("um", total=20.0, granularity="page"),
+        _cell("um_advise", total=5.0, granularity="page"),
+    ]
+    sp = speedup_vs_um(cells)
+    assert sp[("app", "plat", "in_memory", "um_advise", "group")] == 2.0
+    assert sp[("app", "plat", "in_memory", "um_advise", "page")] == 4.0
+    # order independence: the page block first must give the same answer
+    assert speedup_vs_um(cells[::-1]) == sp
 
 
 def test_cell_result_row_na_and_json_round_trip():
