@@ -15,6 +15,8 @@ independent re-runs.
 """
 from __future__ import annotations
 
+import os
+
 from repro.core.simulator import GB
 from repro.umbench.harness import (
     EXTENDED_PLATFORMS,
@@ -24,6 +26,7 @@ from repro.umbench.harness import (
     default_workers,
     run_matrix,
     run_page_matrix,
+    run_specs,
     speedup_vs_um,
 )
 from repro.umbench.platforms import PLATFORMS
@@ -35,9 +38,40 @@ VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
 _MATRIX: list[CellResult] | None = None
 _EXTENDED: list[CellResult] | None = None
 _PAGE: list[CellResult] | None = None
+_DEGRADATION: list[CellResult] | None = None
 # workers actually handed to the pooled sweeps (run.py records this so the
 # BENCH artifact's sweep_workers matches the pool that really ran)
 LAST_SWEEP_WORKERS: int | None = None
+
+# Crash-safe sweep checkpointing (DESIGN.md §12): run.py points this at a
+# journal directory before the sweeps run; ``--resume`` loads completed
+# cells from a previous interrupted run, otherwise stale journals are
+# truncated so changed code is never suppressed by old results.
+SWEEP_JOURNAL_DIR: str | None = None
+SWEEP_RESUME: bool = False
+# per-sweep (reused, ran) counters from the journals, for run.py's log line
+JOURNAL_STATS: dict[str, tuple[int, int]] = {}
+
+
+def configure_journals(directory: str | None, resume: bool = False) -> None:
+    global SWEEP_JOURNAL_DIR, SWEEP_RESUME
+    SWEEP_JOURNAL_DIR = directory
+    SWEEP_RESUME = resume
+
+
+def _journal(name: str):
+    """A SweepJournal for the named sweep, or None when journaling is off."""
+    if SWEEP_JOURNAL_DIR is None:
+        return None
+    from repro.umbench.journal import SweepJournal
+    return SweepJournal(os.path.join(SWEEP_JOURNAL_DIR, f"{name}.jsonl"),
+                        resume=SWEEP_RESUME)
+
+
+def _close_journal(name: str, journal) -> None:
+    if journal is not None:
+        JOURNAL_STATS[name] = (journal.reused, journal.ran)
+        journal.close()
 
 
 def matrix_cells(extended: bool = False,
@@ -50,12 +84,18 @@ def matrix_cells(extended: bool = False,
     if extended:
         if _EXTENDED is None:
             LAST_SWEEP_WORKERS = workers or default_workers()
-            _EXTENDED = run_matrix(
-                platform_names=EXTENDED_PLATFORMS,
-                regimes=("in_memory", "oversubscribed", "oversubscribed_2x"),
-                variants=EXTENDED_VARIANTS,
-                workers=LAST_SWEEP_WORKERS,
-            )
+            journal = _journal("ext")
+            try:
+                _EXTENDED = run_matrix(
+                    platform_names=EXTENDED_PLATFORMS,
+                    regimes=("in_memory", "oversubscribed",
+                             "oversubscribed_2x"),
+                    variants=EXTENDED_VARIANTS,
+                    workers=LAST_SWEEP_WORKERS,
+                    journal=journal,
+                )
+            finally:
+                _close_journal("ext", journal)
         return _EXTENDED
     if _MATRIX is None:
         _MATRIX = run_matrix()
@@ -69,7 +109,12 @@ def page_cells(workers: int | None = None) -> list[CellResult]:
     global _PAGE, LAST_SWEEP_WORKERS
     if _PAGE is None:
         LAST_SWEEP_WORKERS = workers or default_workers()
-        _PAGE = run_page_matrix(workers=LAST_SWEEP_WORKERS)
+        journal = _journal("page")
+        try:
+            _PAGE = run_page_matrix(workers=LAST_SWEEP_WORKERS,
+                                    journal=journal)
+        finally:
+            _close_journal("page", journal)
     return _PAGE
 
 
@@ -241,6 +286,95 @@ def table_page_granularity() -> list[str]:
                 blow = f"{c.report.n_faults / g.report.n_faults:.2f}"
         rows.append(f"page,{c.app},{c.platform},{c.regime},{c.variant},"
                     f"{t},{faults},{blow}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Degradation sweep (DESIGN.md §12): injected-fault scenarios x adaptive-vs-
+# static tiers on the thrash-prone oversubscribed cells
+# ---------------------------------------------------------------------------
+
+DEGRADATION_APPS = ("bs", "cg", "fdtd3d")
+DEGRADATION_PLATS = ("p9-volta-nvlink", "grace-hopper-c2c")
+DEGRADATION_PAIRS = (
+    ("advise", "um_advise", "um_adaptive_advise"),
+    ("prefetch", "um_prefetch_pipelined", "um_prefetch_adaptive"),
+)
+DEGRADATION_SCENARIOS = ("degraded_link", "flaky_migration", "fault_storm",
+                         "hostile")
+
+
+def degradation_cells(workers: int | None = None) -> list[CellResult]:
+    """The (memoized) injected-fault sweep: every DEGRADATION scenario x
+    pair tier x traced app x coherent platform, oversubscribed.  Clean
+    baselines are NOT re-run here — they are the same oversubscribed cells
+    the extended matrix already holds."""
+    global _DEGRADATION, LAST_SWEEP_WORKERS
+    if _DEGRADATION is None:
+        from repro.core.faults import SCENARIOS
+        specs = [
+            (app, pname, variant, "oversubscribed", "group", SCENARIOS[scen])
+            for scen in DEGRADATION_SCENARIOS
+            for _, static, adaptive in DEGRADATION_PAIRS
+            for variant in (static, adaptive)
+            for app in DEGRADATION_APPS
+            for pname in DEGRADATION_PLATS
+        ]
+        LAST_SWEEP_WORKERS = workers or default_workers()
+        journal = _journal("degradation")
+        try:
+            _DEGRADATION = run_specs(specs, workers=LAST_SWEEP_WORKERS,
+                                     journal=journal)
+        finally:
+            _close_journal("degradation", journal)
+    return _DEGRADATION
+
+
+def table_degradation() -> list[str]:
+    """Fault-injected slowdown per cell plus the per-(scenario, pair)
+    worst case (DESIGN.md §12).  ``slowdown`` is injected time over the
+    *clean static* tier's time on the same cell — the common reference, so
+    the adaptive tiers are credited both for shedding the injected
+    pathology and for escaping the thrash the static advise tier was
+    already paying clean.  The ``degradation_worst`` summary rows carry
+    ``adaptive_bounds=yes`` where the adaptive tier's worst cell is
+    strictly faster than the static tier's worst cell under that scenario
+    (tests/test_adaptive_tiers.py pins >=3 scenarios bounded)."""
+    clean = {(c.app, c.platform, c.variant): c.report.total_s
+             for c in matrix_cells(extended=True)
+             if c.regime == "oversubscribed" and c.report is not None}
+    injected = {(c.faults, c.app, c.platform, c.variant): c
+                for c in degradation_cells()}
+    rows = ["table,scenario,pair,app,platform,variant,kind,total_s,"
+            "clean_static_s,slowdown_vs_clean_static"]
+    summary = []
+    for scen in DEGRADATION_SCENARIOS:
+        for pair, static, adaptive in DEGRADATION_PAIRS:
+            worst = {"static": 0.0, "adaptive": 0.0}
+            for kind, variant in (("static", static), ("adaptive", adaptive)):
+                for app in DEGRADATION_APPS:
+                    for pname in DEGRADATION_PLATS:
+                        base = clean[(app, pname, static)]
+                        cell = injected[(scen, app, pname, variant)]
+                        if cell.report is None:
+                            rows.append(
+                                f"degradation,{scen},{pair},{app},{pname},"
+                                f"{variant},{kind},NA,{base:.4f},NA")
+                            continue
+                        t = cell.report.total_s
+                        slow = t / base
+                        worst[kind] = max(worst[kind], slow)
+                        rows.append(
+                            f"degradation,{scen},{pair},{app},{pname},"
+                            f"{variant},{kind},{t:.4f},{base:.4f},"
+                            f"{slow:.2f}")
+            bounds = "yes" if worst["adaptive"] < worst["static"] else "no"
+            summary.append(
+                f"degradation_worst,{scen},{pair},"
+                f"{worst['static']:.2f},{worst['adaptive']:.2f},{bounds}")
+    rows.append("table,scenario,pair,static_worst,adaptive_worst,"
+                "adaptive_bounds")
+    rows.extend(summary)
     return rows
 
 

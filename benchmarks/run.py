@@ -1,5 +1,6 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark entry point:  PYTHONPATH=src python -m benchmarks.run [--fast] [--json]
+"""Benchmark entry point:
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json] [--resume]
 
 Emits, as CSV blocks:
   fig3/fig6     the paper's in-memory/oversubscribed tables (simulated UM)
@@ -8,22 +9,32 @@ Emits, as CSV blocks:
   ext           extended sweep (grace-hopper-c2c + 200 % regime) [not --fast]
   psched        staged vs pipelined prefetch scheduling (§11) [not --fast]
   page          full-matrix 64 KB page-granularity sweep [not --fast]
+  degradation   injected-fault scenarios x adaptive-vs-static tiers (§12)
+                [not --fast]
   table1        working-set sizing
   lm            per-arch reduced train/decode step timings (real CPU)
   kernel        Pallas-kernel call timings (interpret mode) vs jnp oracle
   roofline      §Roofline terms per (arch x shape) from dry-run artifacts
   dryrun        §Dry-run compile/memory summary, both meshes
 
-``--json`` additionally writes BENCH_umbench.json: wall-clock seconds per
-block, the simulated totals of every matrix cell, the seed-baseline
-speedup, and — when a previous BENCH_umbench.json exists — per-cell deltas
-against it (the ROADMAP's perf-trajectory item: every PR's artifact is
-diffed cell-by-cell against its predecessor's).
+``--json`` additionally writes BENCH_umbench.json (via temp file + atomic
+rename — an interrupted write can never tear the artifact): wall-clock
+seconds per block, the simulated totals of every matrix cell, the
+seed-baseline speedup, and — when a previous BENCH_umbench.json exists —
+per-cell deltas against it (the ROADMAP's perf-trajectory item: every
+PR's artifact is diffed cell-by-cell against its predecessor's).
+
+The pooled sweeps journal every completed cell to ``.umbench_journal/``
+(fsync'd JSONL, DESIGN.md §12).  ``--resume`` replays completed cells
+from the journals of a previous interrupted run and re-runs only the
+rest; without it, stale journals are truncated.  The journal directory is
+removed after a fully successful run.
 """
 from __future__ import annotations
 
 import json
 import os
+import shutil
 import sys
 import time
 
@@ -34,6 +45,7 @@ import time
 SEED_BASELINE_MATRIX_240_S = 58.8
 
 BENCH_PATH = "BENCH_umbench.json"
+JOURNAL_DIR = ".umbench_journal"
 
 
 # the cell-identity axes, in key order; new_axis_values labels fresh axis
@@ -116,7 +128,12 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
 def main() -> None:
     fast = "--fast" in sys.argv
     emit_json = "--json" in sys.argv
+    resume = "--resume" in sys.argv
     from benchmarks import lm_bench, paper_tables, roofline
+
+    # crash-safe sweeps (§12): every pooled sweep checkpoints per-cell;
+    # --resume replays completed cells of an interrupted previous run
+    paper_tables.configure_journals(JOURNAL_DIR, resume=resume)
 
     timings: dict[str, float] = {}
     blocks: list[list[str]] = []
@@ -140,6 +157,7 @@ def main() -> None:
         timed("ext", paper_tables.table_extended_sweep)
         timed("psched", paper_tables.table_prefetch_pipeline)
         timed("page", paper_tables.table_page_granularity)
+        timed("degradation", paper_tables.table_degradation)
         timed("kernel", lm_bench.kernel_rows)
         timed("lm", lm_bench.arch_step_rows)
     timed("roofline", roofline.roofline_rows)
@@ -188,14 +206,27 @@ def main() -> None:
                 "prev_matrix_240_wall_s": prev.get("matrix_240_wall_s"),
                 **cell_deltas(prev.get("cells", []), rows),
             }
-        with open(BENCH_PATH, "w") as f:
+        # temp file + atomic rename: a crash mid-dump leaves the previous
+        # artifact intact instead of a torn BENCH_umbench.json
+        tmp = BENCH_PATH + ".tmp"
+        with open(tmp, "w") as f:
             json.dump(payload, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, BENCH_PATH)
         vs = payload.get("vs_prev")
         trail = (f", {vs['cells_changed']}/{vs['cells_compared']} cells "
                  f"changed vs prev" if vs else "")
         print(f"wrote {BENCH_PATH} ({len(cells)} cells, "
               f"matrix {matrix_wall:.2f}s, "
               f"{payload['speedup_vs_seed']}x vs seed{trail})")
+
+    if paper_tables.JOURNAL_STATS:
+        stats = ", ".join(f"{k}: {r} reused/{n} ran"
+                          for k, (r, n) in paper_tables.JOURNAL_STATS.items())
+        print(f"sweep journals ({JOURNAL_DIR}): {stats}")
+    # everything completed: the checkpoints have served their purpose
+    shutil.rmtree(JOURNAL_DIR, ignore_errors=True)
 
 
 if __name__ == '__main__':

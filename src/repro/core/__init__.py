@@ -6,6 +6,7 @@
 - prefetch:   bulk async host->HBM transfer (paper §II-C)
 - streaming:  layer-weight streaming + offloaded remat
 - simulator:  page-granular discrete-event UM model (paper §II, faithful)
+- faults:     deterministic fault injection for the simulator (§12)
 """
 from repro.core.advise import (
     Accessor,
@@ -25,6 +26,12 @@ from repro.core.residency import (
     ResidencyPlanner,
     plan_cell,
 )
+from repro.core.faults import (
+    FaultInjector,
+    FaultScenario,
+    SCENARIOS,
+    get_scenario,
+)
 from repro.core.simulator import (
     GB,
     KB,
@@ -33,6 +40,7 @@ from repro.core.simulator import (
     Region,
     SimPlatform,
     SimReport,
+    ThrashWindow,
     UMSimulator,
 )
 
@@ -61,5 +69,6 @@ __all__ = [
     "PrefetchIterator", "prefetch_to_device", "HBM_PER_DEVICE_BYTES",
     "MemoryBudget", "ResidencyPlan", "ResidencyPlanner", "plan_cell",
     "GB", "KB", "MB", "OversubscriptionError", "Region", "SimPlatform",
-    "SimReport", "UMSimulator",
+    "SimReport", "ThrashWindow", "UMSimulator",
+    "FaultInjector", "FaultScenario", "SCENARIOS", "get_scenario",
 ]

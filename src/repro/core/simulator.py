@@ -64,9 +64,19 @@ coherent-fabric fault explosion *directly* (one fault per page under
 pressure) instead of via the seed's ``size // page_bytes`` shortcut.  Fault
 events outside the pressure path coalesce per 2 MB group span so in-memory
 fault counts stay comparable across granularities.
+
+Robustness layer (DESIGN.md §12): ``set_fault_injector`` attaches a seeded
+``repro.core.faults.FaultInjector`` that degrades transfer events and
+amplifies fault batches; every injection site is behind an
+``if self._inj is not None`` guard, so the engine is bit-identical to the
+pre-injection code path when no injector is attached.  Independently,
+``SimReport.thrash`` records a rolling per-kernel fault/eviction-rate
+window (always on, zero numeric effect) that the adaptive variant tiers
+read to detect thrash and degrade gracefully.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Mapping
@@ -175,6 +185,53 @@ class Region:
         return bool(self.on_device[idx] or self.duplicated[idx])
 
 
+class ThrashWindow:
+    """Rolling per-kernel fault/eviction-rate window (DESIGN.md §12).
+
+    The simulator feeds its cumulative fault/eviction counters through
+    :meth:`observe` at the end of every kernel launch; the window keeps the
+    last ``size`` per-launch *deltas* (faults and evictions attributable to
+    that launch, including eviction traffic from prefetches issued since
+    the previous launch).  :meth:`thrashing` — any eviction inside the
+    window — is the adaptive tiers' degradation trigger: eviction is the
+    unambiguous memory-pressure signal (in-memory traces never evict, which
+    is what pins the adaptive tiers bit-identical to their static bases on
+    thrash-free traces).  Recording is always on and affects no simulated
+    number, so it cannot perturb engine parity.
+    """
+
+    SIZE = 4
+
+    def __init__(self, size: int = SIZE):
+        self.size = int(size)
+        self.samples: collections.deque = collections.deque(maxlen=self.size)
+        self._last = (0, 0)
+        self.n_thrash_steps = 0     # launches observed while thrashing
+
+    def observe(self, n_faults: int, n_evictions: int) -> None:
+        df = n_faults - self._last[0]
+        de = n_evictions - self._last[1]
+        self._last = (n_faults, n_evictions)
+        self.samples.append((df, de))
+        if self.thrashing():
+            self.n_thrash_steps += 1
+
+    def fault_rate(self) -> float:
+        """Mean faults per launch over the window (0 when empty)."""
+        if not self.samples:
+            return 0.0
+        return sum(s[0] for s in self.samples) / len(self.samples)
+
+    def eviction_rate(self) -> float:
+        """Mean evictions per launch over the window (0 when empty)."""
+        if not self.samples:
+            return 0.0
+        return sum(s[1] for s in self.samples) / len(self.samples)
+
+    def thrashing(self) -> bool:
+        return any(s[1] for s in self.samples)
+
+
 @dataclasses.dataclass
 class SimReport:
     """Same decomposition as the paper's Fig. 4/7 stacked bars."""
@@ -200,7 +257,22 @@ class SimReport:
     #                                 in-flight async-copy arrivals
     prefetch_overlap_s: float = 0.0  # prefetch copy time hidden under
     #                                  compute = copy_s - wait_s, >= 0
+    # fault-injection accounting (DESIGN.md §12; vectorized engine only,
+    # all 0 unless a FaultInjector is attached — the seed oracle and every
+    # injector-free run leave them untouched):
+    n_retries: int = 0              # failed transfer attempts, retried
+    retry_stall_s: float = 0.0      # backoff latency charged to the streams
+    n_degraded_xfers: int = 0       # transfer events inside degraded windows
+    n_storm_faults: int = 0         # extra fault events from storm windows
     total_s: float = 0.0
+
+    def __post_init__(self):
+        # rolling fault/eviction-rate window, recorded at the end of every
+        # kernel launch (always on, zero numeric effect — the adaptive
+        # tiers' thrash-detection input).  A plain attribute, not a field:
+        # it is runtime state, and must stay invisible to asdict()/== so
+        # the field-by-field parity oracles keep comparing pure numbers.
+        self.thrash = ThrashWindow()
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -210,6 +282,16 @@ class SimReport:
             "dtoh": self.dtoh_s,
             "remote": self.remote_s,
         }
+
+    def to_json_dict(self) -> dict:
+        """Full-precision numeric fields — the sweep journal's on-disk form
+        (``thrash`` is a plain runtime attribute, never serialized)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping) -> "SimReport":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
 
 class OversubscriptionError(RuntimeError):
@@ -247,6 +329,16 @@ class UMSimulator:
         # set once eviction has happened: the memory-pressure regime in which
         # coherent platforms lose the block-duplication heuristic (see header)
         self._pressure = False
+        # fault injector (DESIGN.md §12): None means the robustness layer is
+        # entirely absent — every injection site guards on this, so the
+        # disabled engine is bit-identical to the pre-injection code path
+        self._inj = None
+
+    def set_fault_injector(self, injector) -> None:
+        """Attach a :class:`repro.core.faults.FaultInjector` for this run.
+        Must be called before the first simulated event; the injector's
+        cumulative accounting is copied onto the report by ``finish``."""
+        self._inj = injector
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -288,6 +380,46 @@ class UMSimulator:
     def advise_accessed_by(self, name: str, accessor: Accessor) -> None:
         r = self.regions[name]
         r.accessed_by = r.accessed_by + (accessor,)
+
+    # -- advise withdrawal (the adaptive tiers' degradation ops, §12) ----------
+    def unadvise_read_mostly(self, name: str) -> None:
+        """Withdraw READ_MOSTLY: stop duplicating on future reads and drop
+        existing device duplicates for free — the host copy is valid, so
+        there is only device memory to release (the same free-drop
+        ``prefetch``-to-host performs).  Under eviction pressure this is the
+        graceful exit from the paper's P9 re-duplication pathology."""
+        r = self.regions[name]
+        r.read_mostly = False
+        dup_ids = np.nonzero(r.duplicated)[0]
+        if not len(dup_ids):
+            return
+        r.duplicated[dup_ids] = False
+        gone = dup_ids[~r.on_device[dup_ids]]
+        if len(gone):
+            self.device_used -= int(r.sizes[gone].sum())
+            self.report.n_dropped += len(gone)
+            self._index_remove(r, gone)
+            self._pf_clear(r, gone)
+
+    def unadvise_preferred_location(self, name: str) -> None:
+        """Withdraw PREFERRED_LOCATION: pages are no longer pinned (and no
+        longer eagerly restored on coherent fabrics).  Resident chunks
+        filed in the pinned queue are re-filed at the unpinned tail in
+        residency-stamp order — the batched equivalent of the seed's lazy
+        pop-time reclassification, applied eagerly so sweeps never fall
+        into the O(chunks)-per-pop scalar anomaly path."""
+        r = self.regions[name]
+        if r.preferred is None:
+            return
+        r.preferred = None
+        if not r.q_live[1]:
+            return
+        ids = np.nonzero(r.in_pin_queue & (r.entry_ptr >= 0))[0]
+        ids = ids[np.argsort(r.stamp[ids], kind="stable")]
+        self._index_remove(r, ids)
+        r.in_pin_queue[ids] = False
+        r.stamp[ids] = self._stamps(len(ids))
+        self._index_append(r, ids)
 
     def enable_access_counters(self, name: str, threshold: float) -> None:
         """Arm Grace-Hopper-style per-chunk access counters (DESIGN.md §10)
@@ -514,6 +646,10 @@ class UMSimulator:
         if mig.any():
             msz = sizes[mig]
             t = float((msz / (self.p.link_bw_gbs * GB)).sum())
+            if self._inj is not None:
+                scale, backoff = self._inj.transfer(t)
+                t *= scale
+                self.t_device += backoff
             self.report.dtoh_s += t
             self.report.dtoh_bytes += int(msz.sum())
             # eviction write-back is on the critical path of the allocation
@@ -629,10 +765,13 @@ class UMSimulator:
             self._evict_for(size)
         one = np.array([idx])
         if not r.populated[idx]:
-            stall = self.p.fault_latency_us * 1e-6
+            events = 1
+            if self._inj is not None:
+                events = self._inj.fault_events(1)
+            stall = events * self.p.fault_latency_us * 1e-6
             self.t_device += stall
             self.report.fault_stall_s += stall
-            self.report.n_faults += 1
+            self.report.n_faults += events
             r.populated[idx] = True
             self._insert_resident(r, one, duplicate=False)
             return
@@ -643,8 +782,13 @@ class UMSimulator:
                 groups = max(1, size // self.p.page_bytes)    # ATS 64K faults
             else:
                 latency *= 0.5                                # no host unmap
-        stall = groups * latency * 1e-6
         xfer = size / (self.p.link_bw_gbs * GB * self.p.fault_migration_efficiency)
+        if self._inj is not None:
+            groups = self._inj.fault_events(groups)
+            scale, backoff = self._inj.transfer(xfer)
+            xfer *= scale
+            self.t_device += backoff
+        stall = groups * latency * 1e-6
         self.t_device += stall + xfer
         self.report.fault_stall_s += stall
         self.report.htod_s += xfer
@@ -794,6 +938,8 @@ class UMSimulator:
             # first device touch of virgin pages: populate on the device —
             # fault latency only, nothing to copy
             events = self._n_fault_events(r, ids[virgin])
+            if self._inj is not None:
+                events = self._inj.fault_events(events)
             self.t_device += events * lat
             self.report.fault_stall_s += events * lat
             self.report.n_faults += events
@@ -807,22 +953,32 @@ class UMSimulator:
                     # system page granularity — the Fig. 7c/8c explosion
                     pgroups = np.maximum(1, psz[pressured] // self.p.page_bytes)
                     n_p = int(pgroups.sum())
+                    if self._inj is not None:
+                        n_p = self._inj.fault_events(n_p)
                     self.report.fault_stall_s += n_p * lat
                     self.t_device += n_p * lat
                     self.report.n_faults += n_p
                 if (~pressured).any():
                     events = self._n_fault_events(r, pids[~pressured])
+                    if self._inj is not None:
+                        events = self._inj.fault_events(events)
                     stall = events * lat * 0.5                # no host unmap
                     self.report.fault_stall_s += stall
                     self.t_device += stall
                     self.report.n_faults += events
             else:
                 events = self._n_fault_events(r, pids)
+                if self._inj is not None:
+                    events = self._inj.fault_events(events)
                 self.report.fault_stall_s += events * lat
                 self.t_device += events * lat
                 self.report.n_faults += events
             xfer = float((psz / (self.p.link_bw_gbs * GB
                                  * self.p.fault_migration_efficiency)).sum())
+            if self._inj is not None:
+                scale, backoff = self._inj.transfer(xfer)
+                xfer *= scale
+                self.t_device += backoff
             self.t_device += xfer
             self.report.htod_s += xfer
             self.report.htod_bytes += int(psz.sum())
@@ -840,11 +996,15 @@ class UMSimulator:
         if self.device_used + size > self.device_capacity:
             self._evict_for(size)
         xfer = size / (self.p.link_bw_gbs * GB)
+        backoff = 0.0
+        if self._inj is not None:
+            scale, backoff = self._inj.transfer(xfer)
+            xfer *= scale
         if asynchronous:
-            self.t_copy = max(self.t_copy, self.t_device) + xfer
+            self.t_copy = max(self.t_copy, self.t_device) + backoff + xfer
             r.arrival[idx] = self.t_copy
         else:
-            self.t_device += xfer
+            self.t_device += backoff + xfer
             r.arrival[idx] = self.t_device
         self.report.htod_s += xfer
         self.report.htod_bytes += size
@@ -865,12 +1025,18 @@ class UMSimulator:
         if int(need[-1]) <= 0:
             # fast path: everything fits
             X = np.cumsum(x)
+            backoff = 0.0
+            if self._inj is not None:
+                # one event per bulk-copy run: degradation scales every
+                # chunk's arrival, backoff delays the run's start
+                scale, backoff = self._inj.transfer(float(X[-1]))
+                X = X * scale
             if asynchronous:
-                base = max(self.t_copy, self.t_device)
+                base = max(self.t_copy, self.t_device) + backoff
                 arr = base + X
                 self.t_copy = float(arr[-1])
             else:
-                arr = self.t_device + X
+                arr = self.t_device + backoff + X
                 self.t_device = float(arr[-1])
             r.arrival[ids] = arr
             self.report.htod_s += float(X[-1])
@@ -898,6 +1064,16 @@ class UMSimulator:
         plan = self._plan_victims(r, ids, need, own_dup)
         if plan is None:
             return False
+        t_copy0 = self.t_copy
+        if self._inj is not None:
+            # one event per evicting bulk-copy run; the victims' write-backs
+            # draw their own events inside _commit_evictions, so the d_i
+            # below use clean write-back estimates — a schedule-quality
+            # approximation (arrivals may be optimistic), never an
+            # accounting inconsistency (DESIGN.md §12)
+            scale, backoff = self._inj.transfer(float(np.sum(x)))
+            x = x * scale
+            t_copy0 = t_copy0 + backoff
         # copy-stream clock: the device clock advances by each migrated
         # victim's write-back before the copy that consumed it, so
         # t_copy_i = max(t_copy_{i-1}, d_i) + x_i with d_i closed-form below;
@@ -908,7 +1084,7 @@ class UMSimulator:
         dtoh_cum = np.concatenate([[0.0], np.cumsum(v_dtoh)])
         d = self.t_device + dtoh_cum[plan["m"]]
         X = np.cumsum(x)
-        u = np.maximum(self.t_copy, np.maximum.accumulate(d - (X - x)))
+        u = np.maximum(t_copy0, np.maximum.accumulate(d - (X - x)))
         arr = u + X
         self.t_copy = float(arr[-1])
         self._insert_resident(r, ids, duplicate=duplicate)
@@ -986,6 +1162,10 @@ class UMSimulator:
         if len(ids):
             sz = r.sizes[ids]
             t = float((sz / (self.p.link_bw_gbs * GB)).sum())
+            if self._inj is not None:
+                scale, backoff = self._inj.transfer(t)
+                t *= scale
+                self.t_device += backoff
             self.t_device += t
             self.report.dtoh_s += t
             self.report.dtoh_bytes += int(sz.sum())
@@ -1042,7 +1222,11 @@ class UMSimulator:
             if len(ids):
                 sz = r.sizes[ids]
                 t = float((sz / (self.p.link_bw_gbs * GB)).sum())
-                self.t_copy = max(self.t_copy, self.t_device) + t
+                backoff = 0.0
+                if self._inj is not None:
+                    scale, backoff = self._inj.transfer(t)
+                    t *= scale
+                self.t_copy = max(self.t_copy, self.t_device) + backoff + t
                 self.report.dtoh_s += t
                 self.report.dtoh_bytes += int(sz.sum())
                 self.device_used -= int(sz.sum())
@@ -1112,11 +1296,16 @@ class UMSimulator:
                 events = self._n_fault_events(r, dev_ids)
                 stall = events * self.p.fault_latency_us * 1e-6
                 xfer = float((sz / (self.p.link_bw_gbs * GB)).sum())
+                backoff = 0.0
+                if self._inj is not None:
+                    scale, backoff = self._inj.transfer(xfer)
+                    xfer *= scale
                 self.report.fault_stall_s += stall
                 self.report.dtoh_s += xfer
                 self.report.dtoh_bytes += total
                 self.report.n_faults += events
-                self.t_copy = max(self.t_copy, self.t_device) + stall + xfer
+                self.t_copy = (max(self.t_copy, self.t_device)
+                               + stall + backoff + xfer)
                 self.device_used -= total
                 self._index_remove(r, dev_ids)
                 r.on_device[dev_ids] = False
@@ -1145,11 +1334,15 @@ class UMSimulator:
             events = self._n_fault_events(r, sel)
             stall = events * self.p.fault_latency_us * 1e-6
             xfer = float((sz / (self.p.link_bw_gbs * GB)).sum())
+            backoff = 0.0
+            if self._inj is not None:
+                scale, backoff = self._inj.transfer(xfer)
+                xfer *= scale
             self.report.fault_stall_s += stall
             self.report.dtoh_s += xfer
             self.report.dtoh_bytes += total
             self.report.n_faults += events
-            self.t_device += stall + xfer
+            self.t_device += stall + backoff + xfer
             self.device_used -= total
             self._index_remove(r, sel)
             r.on_device[sel] = False
@@ -1259,6 +1452,11 @@ class UMSimulator:
         for r in write_set:
             r.populated[touched[r.name]] = True
         self._eager_restore()
+        # rolling thrash window (§12): one sample per launch — the deltas
+        # since the previous launch, including eviction/fault activity from
+        # prefetches and eager restores in between.  Pure observation.
+        self.report.thrash.observe(self.report.n_faults,
+                                   self.report.n_evictions)
 
     def finish(self) -> SimReport:
         # prefetch copy time the compute stream never saw: busy copy-stream
@@ -1266,5 +1464,12 @@ class UMSimulator:
         # (staged-vs-pipelined schedules differ exactly here, DESIGN.md §11)
         self.report.prefetch_overlap_s = max(
             0.0, self.report.prefetch_copy_s - self.report.prefetch_wait_s)
+        if self._inj is not None:
+            # injection accounting lives on the injector during the run;
+            # surface the cumulative totals on the report (§12)
+            self.report.n_retries = self._inj.n_retries
+            self.report.retry_stall_s = self._inj.retry_stall_s
+            self.report.n_degraded_xfers = self._inj.n_degraded_xfers
+            self.report.n_storm_faults = self._inj.n_storm_faults
         self.report.total_s = max(self.t_device, self.t_copy)
         return self.report

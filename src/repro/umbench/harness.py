@@ -29,12 +29,28 @@ with the paper's Fig. 4/7 breakdown (compute / fault stall / HtoD / DtoH).
 process pool — cells are independent simulations, so the sweep scales with
 cores; the default stays serial (the vectorized engine already runs the
 seed 240-cell matrix in a few seconds).
+
+Robustness (DESIGN.md §12): ``run_cell`` wraps the whole lowering so any
+unexpected exception — and any per-cell ``timeout_s`` expiry — surfaces as
+a failure record carrying the (workload, strategy, platform, regime) key
+instead of an opaque pool traceback; a ``faults=`` scenario attaches a
+seeded ``repro.core.faults`` injector.  The pooled sweep isolates worker
+crashes (a broken pool is rebuilt and the in-flight cells retried with
+bounded exponential backoff; a deterministically crashing cell becomes a
+failure record, never a dead sweep), and an optional
+``journal.SweepJournal`` checkpoints every completed cell so interrupted
+sweeps resume without re-running finished work.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from concurrent.futures import ProcessPoolExecutor
+import signal
+import threading
+import time
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from concurrent.futures.process import BrokenProcessPool
+from contextlib import contextmanager
 from typing import Callable
 
 from repro.core.simulator import (
@@ -51,11 +67,14 @@ from repro.umbench.workload import Workload
 
 VARIANTS = ("explicit", "um", "um_advise", "um_prefetch", "um_both")
 # beyond-paper tiers: the SVM remote-access-only tier, the Grace-Hopper
-# access-counter hybrid, host-pinned zero-copy for PCIe platforms, and the
-# capacity-aware pipelined prefetch schedules (DESIGN.md §11)
+# access-counter hybrid, host-pinned zero-copy for PCIe platforms, the
+# capacity-aware pipelined prefetch schedules (DESIGN.md §11), and the
+# thrash-aware adaptive tiers that degrade their static bases under
+# eviction pressure (DESIGN.md §12)
 BEYOND_PAPER_VARIANTS = ("svm_remote", "um_hybrid_counters",
                          "um_pinned_zero_copy", "um_prefetch_pipelined",
-                         "um_both_pipelined")
+                         "um_both_pipelined", "um_adaptive_advise",
+                         "um_prefetch_adaptive")
 EXTENDED_VARIANTS = VARIANTS + BEYOND_PAPER_VARIANTS
 REGIMES = {
     "in_memory": 0.80,
@@ -106,6 +125,9 @@ class CellResult:
     regime: str
     report: SimReport | None      # None => N/A (explicit cannot oversubscribe;
     granularity: str = "group"    # remote tiers need their platform gate)
+    faults: str | None = None     # fault-scenario name, None = clean run
+    error: str | None = None      # per-cell failure record (timeout/crash/
+    #                               exception); report is None when set
 
     @property
     def total_s(self) -> float | None:
@@ -113,6 +135,9 @@ class CellResult:
 
     def row(self) -> dict:
         r = self.report
+        # faults/error/injection keys appear only when set, so clean-run
+        # rows keep the exact pre-§12 BENCH schema (the committed-artifact
+        # diff gate matches on them)
         return {
             "app": self.app,
             "platform": self.platform,
@@ -136,42 +161,130 @@ class CellResult:
                 "prefetch_wait_s": round(r.prefetch_wait_s, 4),
                 "prefetch_overlap_s": round(r.prefetch_overlap_s, 4),
             }),
+            **({} if self.faults is None else {"fault_scenario": self.faults}),
+            **({} if self.faults is None or r is None else {
+                "n_retries": r.n_retries,
+                "retry_stall_s": round(r.retry_stall_s, 4),
+                "n_degraded_xfers": r.n_degraded_xfers,
+                "n_storm_faults": r.n_storm_faults,
+            }),
+            **({} if self.error is None else {"error": self.error}),
         }
+
+
+class CellTimeout(Exception):
+    """A cell exceeded its per-cell wall-clock budget (``timeout_s``)."""
+
+
+@contextmanager
+def _cell_deadline(seconds: float | None):
+    """Raise :class:`CellTimeout` inside the block after ``seconds`` of wall
+    clock.  SIGALRM-based, so it works inside pool workers (each worker's
+    main thread) and interrupts the simulation's pure-Python loops; a
+    no-op off the main thread or where SIGALRM does not exist."""
+    if (not seconds or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise CellTimeout
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old)
 
 
 def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
              platform: SimPlatform | str, regime: str,
-             granularity: str = "group") -> CellResult:
+             granularity: str = "group", faults=None,
+             timeout_s: float | None = None) -> CellResult:
     """Run one matrix cell: lower ``workload`` through ``strategy`` onto a
     fresh simulator.  ``workload``/``strategy``/``platform`` accept either
     objects or registry names; a string workload is sized to the regime's
     fraction of the platform's device memory (the paper's working-set rule).
+
+    ``faults`` (scenario name or ``FaultScenario``) attaches a seeded
+    fault injector salted with the cell key, so the same cell under the
+    same scenario injects identically in every worker (DESIGN.md §12).
+    ``timeout_s`` bounds the cell's wall clock.  Registry-resolution errors
+    (unknown names) still raise — they are caller bugs — but any failure
+    *executing* the cell (timeout included) returns a CellResult carrying
+    the cell key and the reason in ``error`` instead of propagating an
+    opaque traceback through the pool.
     """
     p = plat.PLATFORMS[platform] if isinstance(platform, str) else platform
     strat = var.get_strategy(strategy) if isinstance(strategy, str) else strategy
+    scenario = None
+    if faults is not None:
+        from repro.core import faults as fl
+        scenario = fl.get_scenario(faults)
     if isinstance(workload, str):
         total = REGIMES[regime] * p.device_mem_gb * GB
         workload = WORKLOADS[workload](total)
+    fname = None if scenario is None else scenario.name
     if not strat.available(p):
         return CellResult(workload.name, p.name, strat.name, regime, None,
-                          granularity)
+                          granularity, fname)
     sim = UMSimulator(p, granularity=granularity)
+    if scenario is not None and scenario.enabled():
+        salt = (f"{workload.name}:{p.name}:{strat.name}:{regime}:"
+                f"{granularity}")
+        sim.set_fault_injector(fl.FaultInjector(scenario, salt))
+    error = None
     try:
-        strat.lower(workload, sim)
-        report = sim.finish()
+        with _cell_deadline(timeout_s):
+            strat.lower(workload, sim)
+            report = sim.finish()
     except OversubscriptionError:
         report = None  # the paper: 'the case does not exist with explicit'
+    except CellTimeout:
+        report = None
+        error = f"timeout after {timeout_s}s"
+    except Exception as e:  # noqa: BLE001 — the per-cell failure record
+        report = None
+        error = f"{type(e).__name__}: {e}"
     return CellResult(workload.name, p.name, strat.name, regime, report,
-                      granularity)
+                      granularity, fname, error)
+
+
+def _spec_fields(spec: tuple) -> tuple:
+    """Normalize a 5- or 7-tuple spec to names:
+    (app, platform, variant, regime, granularity, faults, timeout_s)."""
+    app, pname, variant, regime, granularity = spec[:5]
+    faults = spec[5] if len(spec) > 5 else None
+    timeout_s = spec[6] if len(spec) > 6 else None
+    return (getattr(app, "name", app), getattr(pname, "name", pname),
+            getattr(variant, "name", variant), regime, granularity,
+            getattr(faults, "name", faults), timeout_s)
+
+
+def _spec_key(spec: tuple) -> tuple:
+    """Journal identity of a spec (mirrors ``journal.cell_key``)."""
+    return _spec_fields(spec)[:6]
+
+
+def _failure_cell(spec: tuple, reason: str) -> CellResult:
+    app, pname, vname, regime, granularity, fname, _ = _spec_fields(spec)
+    return CellResult(app, pname, vname, regime, None, granularity, fname,
+                      reason)
 
 
 def _run_cell_spec(spec: tuple) -> CellResult:
     """Top-level (picklable) cell runner for the process pool.  ``variant``
     may be a registry name or a VariantStrategy object — run_matrix resolves
     names to objects before pooling so runtime-registered strategies survive
-    spawn-based workers (which re-import the registry's built-ins only)."""
-    app, pname, variant, regime, granularity = spec
-    return run_cell(app, variant, pname, regime, granularity)
+    spawn-based workers (which re-import the registry's built-ins only).
+    Accepts the legacy 5-tuple or the 7-tuple with (faults, timeout_s)."""
+    app, pname, variant, regime, granularity = spec[:5]
+    faults = spec[5] if len(spec) > 5 else None
+    timeout_s = spec[6] if len(spec) > 6 else None
+    return run_cell(app, variant, pname, regime, granularity,
+                    faults=faults, timeout_s=timeout_s)
 
 
 def matrix_specs(apps=None, platform_names=DEFAULT_PLATFORMS,
@@ -187,28 +300,129 @@ def matrix_specs(apps=None, platform_names=DEFAULT_PLATFORMS,
     ]
 
 
+def run_specs(specs: list[tuple], workers: int | None = None,
+              retries: int = 2, retry_backoff_s: float = 0.5,
+              journal=None) -> list[CellResult]:
+    """Run a list of cell specs (5- or 7-tuples, see ``_run_cell_spec``),
+    returning results in spec order.
+
+    The robust sweep core (DESIGN.md §12): cells already present in
+    ``journal`` (a ``journal.SweepJournal``) are replayed from disk
+    instead of re-run; fresh results are journaled as they complete.  With
+    ``workers`` > 1 the cells fan out over a process pool — a worker crash
+    breaks only that pool generation: the casualties are retried up to
+    ``retries`` times *in isolation* (one cell per single-worker pool,
+    after exponential backoff), so a deterministically crashing cell takes
+    the blame alone and becomes a failure record while its innocent
+    pool-mates succeed on their first isolated retry.  In-cell exceptions
+    and timeouts never reach this layer — ``run_cell`` already converts
+    them to failure records.
+    """
+    results: dict[int, CellResult] = {}
+    pending: list[int] = []
+    for i, s in enumerate(specs):
+        cached = journal.lookup(_spec_key(s)) if journal is not None else None
+        if cached is not None:
+            results[i] = cached
+        else:
+            pending.append(i)
+
+    def _done(i: int, cell: CellResult) -> None:
+        results[i] = cell
+        if journal is not None:
+            journal.ran += 1
+            journal.record(cell)
+
+    if pending and workers is not None and workers > 1:
+        def _resolve(s: tuple) -> tuple:
+            # resolve strategy names to objects so runtime-registered
+            # strategies survive spawn-based workers
+            v = var.get_strategy(s[2]) if isinstance(s[2], str) else s[2]
+            return (s[0], s[1], v, *s[3:])
+        rspecs = {i: _resolve(specs[i]) for i in pending}
+        attempts = dict.fromkeys(pending, 0)
+        round_no = 0
+        while pending:
+            crashed: list[int] = []
+            if round_no == 0:
+                with ProcessPoolExecutor(max_workers=workers) as pool:
+                    futs = {}
+                    try:
+                        for i in pending:
+                            futs[pool.submit(_run_cell_spec, rspecs[i])] = i
+                    except BrokenProcessPool:
+                        pass        # pool died mid-submit: the unsubmitted
+                    #                 cells fall through to `crashed` below
+                    submitted = set(futs.values())
+                    crashed.extend(i for i in pending if i not in submitted)
+                    for fut in as_completed(futs):
+                        i = futs[fut]
+                        try:
+                            cell = fut.result()
+                        except BrokenProcessPool:
+                            crashed.append(i)
+                            continue
+                        except Exception as e:  # noqa: BLE001 — unpicklable
+                            cell = _failure_cell(rspecs[i],
+                                                 f"{type(e).__name__}: {e}")
+                        _done(i, cell)
+            else:
+                # retry casualties one per single-worker pool: a cell that
+                # crashes deterministically must not keep taking innocent
+                # pool-mates down with it
+                for i in pending:
+                    with ProcessPoolExecutor(max_workers=1) as pool:
+                        try:
+                            cell = pool.submit(_run_cell_spec,
+                                               rspecs[i]).result()
+                        except BrokenProcessPool:
+                            crashed.append(i)
+                            continue
+                        except Exception as e:  # noqa: BLE001
+                            cell = _failure_cell(rspecs[i],
+                                                 f"{type(e).__name__}: {e}")
+                    _done(i, cell)
+            pending = []
+            for i in crashed:
+                attempts[i] += 1
+                if attempts[i] > retries:
+                    _done(i, _failure_cell(
+                        rspecs[i],
+                        f"worker crashed ({attempts[i]} attempts)"))
+                else:
+                    pending.append(i)
+            if pending:
+                time.sleep(retry_backoff_s * (2 ** round_no))
+                round_no += 1
+    else:
+        for i in pending:
+            _done(i, _run_cell_spec(specs[i]))
+    return [results[i] for i in range(len(specs))]
+
+
 def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
                regimes=DEFAULT_REGIMES, variants=VARIANTS,
                granularity: str = "group",
-               workers: int | None = None) -> list[CellResult]:
+               workers: int | None = None, faults=None,
+               cell_timeout_s: float | None = None,
+               retries: int = 2, retry_backoff_s: float = 0.5,
+               journal=None) -> list[CellResult]:
     """Run the experiment matrix; ``workers`` > 1 fans the independent cells
-    out over a process pool (cells are returned in matrix order either way)."""
+    out over a process pool (cells are returned in matrix order either way).
+    ``faults``/``cell_timeout_s``/``retries``/``journal`` plug in the §12
+    robustness layer — see ``run_specs``."""
     specs = matrix_specs(apps, platform_names, regimes, variants, granularity)
-    if workers is not None and workers > 1:
-        specs = [(a, p, var.get_strategy(v) if isinstance(v, str) else v, r, g)
-                 for a, p, v, r, g in specs]
-        with ProcessPoolExecutor(max_workers=workers) as pool:
-            # fine-grained chunks: heavy cells cluster (one platform x
-            # regime block), so coarse chunks would serialize them onto one
-            # worker — page-mode grace-hopper cells dominate the sweep
-            return list(pool.map(_run_cell_spec, specs,
-                                 chunksize=max(1, len(specs)
-                                               // (workers * 16))))
-    return [_run_cell_spec(s) for s in specs]
+    if faults is not None or cell_timeout_s is not None:
+        # FaultScenario objects ride the spec as-is (picklable frozen
+        # dataclass); _spec_key reduces them to their name
+        specs = [s + (faults, cell_timeout_s) for s in specs]
+    return run_specs(specs, workers=workers, retries=retries,
+                     retry_backoff_s=retry_backoff_s, journal=journal)
 
 
 def run_extended_matrix(workers: int | None = None,
-                        granularity: str = "group") -> list[CellResult]:
+                        granularity: str = "group",
+                        journal=None) -> list[CellResult]:
     """The seed matrix plus the Grace-Hopper platform, the 200 % regime, and
     the beyond-paper variant tiers (svm_remote and um_hybrid_counters are
     N/A on platforms without a coherent fabric; um_pinned_zero_copy needs
@@ -216,16 +430,19 @@ def run_extended_matrix(workers: int | None = None,
     return run_matrix(platform_names=EXTENDED_PLATFORMS,
                       regimes=EXTENDED_REGIMES,
                       variants=EXTENDED_VARIANTS,
-                      granularity=granularity, workers=workers)
+                      granularity=granularity, workers=workers,
+                      journal=journal)
 
 
-def run_page_matrix(workers: int | None = None) -> list[CellResult]:
+def run_page_matrix(workers: int | None = None,
+                    journal=None) -> list[CellResult]:
     """The full extended matrix at 64 KB system-page granularity — the
     regime where fault counts explode (Fig. 7c/8c) and where chunk state is
     ~400k-1.5M pages per region on 96 GB platforms.  Routinely runnable
     since the incremental residency index / run-coalescing rewrite
     (DESIGN.md §9); wall time is tracked in BENCH_umbench.json."""
-    return run_extended_matrix(workers=workers, granularity="page")
+    return run_extended_matrix(workers=workers, granularity="page",
+                               journal=journal)
 
 
 def default_workers() -> int:

@@ -55,6 +55,21 @@ only the hooks where the paper's variants actually differ:
                   maps the other side's memory, the gate is just
                   ``device_can_access_host`` — it exists on every PCIe
                   platform where ``svm_remote`` is N/A.
+``um_adaptive_advise``
+                  beyond-paper (DESIGN.md §12): ``um_advise`` with runtime
+                  feedback — when the report's rolling thrash window shows
+                  eviction pressure, the migration-hostile advises are
+                  withdrawn (READ_MOSTLY duplication dropped, the paper's
+                  P9 pathology; PREFERRED_LOCATION(DEVICE) un-pinned,
+                  stopping eager-restore ping-pong).  Bit-identical to
+                  ``um_advise`` whenever thrash never triggers.
+``um_prefetch_adaptive``
+                  beyond-paper (DESIGN.md §12): ``um_prefetch_pipelined``
+                  with runtime feedback — per-step prefetch windows are
+                  suspended while the thrash window shows eviction
+                  pressure (their copies would evict still-needed data)
+                  and resume when it clears.  Bit-identical to
+                  ``um_prefetch_pipelined`` whenever thrash never triggers.
 ================  ============================================================
 
 Strategies are stateless singletons held in a registry; ``get_strategy``
@@ -338,6 +353,54 @@ class UMPinnedZeroCopyStrategy(VariantStrategy):
         sim.advise_preferred_location(step.name, MemorySpace.HOST)
 
 
+class UMAdaptiveAdviseStrategy(UMAdviseStrategy):
+    """Thrash-aware graceful degradation of the advise tier (DESIGN.md §12).
+
+    Lowers exactly like ``um_advise`` until the report's rolling thrash
+    window (``sim.report.thrash``) shows eviction pressure, then withdraws
+    the migration-hostile advises before the next compute step:
+    READ_MOSTLY duplication is dropped (the free drop — host copies stay
+    valid — that exits the paper's P9 re-duplication fault explosion) and
+    PREFERRED_LOCATION(DEVICE) pins are released (stopping the coherent
+    fabrics' eager-restore ping-pong).  ACCESSED_BY mappings are kept:
+    remote mappings cause no migration and cannot thrash.  The checks only
+    *read* counters, so on traces where thrash never triggers the tier is
+    bit-identical to ``um_advise`` (tests/test_adaptive_tiers.py pins it).
+    """
+
+    name = "um_adaptive_advise"
+
+    def before_step(self, sim: UMSimulator, workload: wk.Workload,
+                    idx: int, step: wk.ComputeStep) -> None:
+        if not sim.report.thrash.thrashing():
+            return
+        for name, r in sim.regions.items():
+            if r.read_mostly:
+                sim.unadvise_read_mostly(name)
+            if r.preferred is MemorySpace.DEVICE:
+                sim.unadvise_preferred_location(name)
+
+
+class UMPrefetchAdaptiveStrategy(UMPrefetchPipelinedStrategy):
+    """Thrash-aware pipelined prefetch (DESIGN.md §12): replays the §11
+    per-step windows until the report's rolling thrash window shows
+    eviction pressure, then *suspends* further windows — under thrash a
+    prefetch evicts still-needed data that refaults, so not prefetching
+    bounds the damage — and resumes when the window clears (the window
+    ages out after ``ThrashWindow.SIZE`` eviction-free launches).  The
+    staging-point windows are unconditional: the thrash window is empty
+    before the first launch, identical to the base tier.  Bit-identical to
+    ``um_prefetch_pipelined`` whenever thrash never triggers."""
+
+    name = "um_prefetch_adaptive"
+
+    def before_step(self, sim: UMSimulator, workload: wk.Workload,
+                    idx: int, step: wk.ComputeStep) -> None:
+        if sim.report.thrash.thrashing():
+            return
+        super().before_step(sim, workload, idx, step)
+
+
 # -- registry ------------------------------------------------------------------
 
 _REGISTRY: dict[str, VariantStrategy] = {}
@@ -367,5 +430,6 @@ def strategy_names() -> tuple[str, ...]:
 for _s in (ExplicitStrategy(), UMStrategy(), UMAdviseStrategy(),
            UMPrefetchStrategy(), UMBothStrategy(), SVMRemoteStrategy(),
            UMHybridCountersStrategy(), UMPinnedZeroCopyStrategy(),
-           UMPrefetchPipelinedStrategy(), UMBothPipelinedStrategy()):
+           UMPrefetchPipelinedStrategy(), UMBothPipelinedStrategy(),
+           UMAdaptiveAdviseStrategy(), UMPrefetchAdaptiveStrategy()):
     register(_s)

@@ -1,0 +1,24 @@
+"""One documented env knob for every randomized-trace suite.
+
+``UMBENCH_TEST_SEED`` (default 0) offsets the per-case seeds of the
+randomized suites (tests/test_residency_index.py), so a soak run can
+sweep fresh traces (``UMBENCH_TEST_SEED=7 pytest ...``) while the default
+stays deterministic.  Failure messages carry :func:`seed_note` — the
+exact seed plus the one-command repro — so a flake is reproducible
+without archaeology.
+"""
+import os
+import random
+
+BASE = int(os.environ.get("UMBENCH_TEST_SEED", "0"))
+
+
+def seeded_rng(case: int) -> random.Random:
+    """The RNG for one parametrized case: ``Random(BASE + case)``."""
+    return random.Random(BASE + case)
+
+
+def seed_note(case: int) -> str:
+    """Repro breadcrumb for assertion messages."""
+    return (f"rng seed {BASE + case}: reproduce with "
+            f"UMBENCH_TEST_SEED={BASE} pytest 'tests/...[{case}]'")

@@ -1,0 +1,180 @@
+"""The §12 thrash-aware adaptive tiers, pinned the §10/§11 way:
+bit-identical to their static base wherever the thrash window never
+fires, strictly better where the base tier is the pathology (P9
+oversubscribed advise, Fig. 7c/8c), and bounding worst-case slowdown
+under injected faults (the table_degradation claim).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.advise import MemorySpace
+from repro.core.simulator import MB, SimPlatform, UMSimulator
+from repro.umbench import variants as var
+from repro.umbench.harness import run_cell
+from repro.umbench.platforms import PLATFORMS
+
+PAIRS = (("um_advise", "um_adaptive_advise"),
+         ("um_prefetch_pipelined", "um_prefetch_adaptive"))
+
+
+def test_adaptive_tiers_registered():
+    names = var.strategy_names()
+    assert "um_adaptive_advise" in names
+    assert "um_prefetch_adaptive" in names
+    for p in PLATFORMS.values():
+        assert var.get_strategy("um_adaptive_advise").available(p)
+        assert var.get_strategy("um_prefetch_adaptive").available(p)
+
+
+# ---------------------------------------------------------------------------
+# no thrash => bit-identical to the static base
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("base,adaptive", PAIRS)
+@pytest.mark.parametrize("app", ["bs", "cg", "fdtd3d"])
+@pytest.mark.parametrize("pname", ["intel-pascal-pcie", "p9-volta-nvlink",
+                                   "grace-hopper-c2c"])
+def test_in_memory_bit_identical_to_base(base, adaptive, app, pname):
+    """In-memory nothing evicts, the window stays cold, and the adaptive
+    tier IS its base — whole-report dataclass equality."""
+    rb = run_cell(app, base, pname, "in_memory").report
+    ra = run_cell(app, adaptive, pname, "in_memory").report
+    assert ra == rb
+    assert ra.thrash.n_thrash_steps == 0
+
+
+def test_thrash_window_semantics():
+    """The window sees per-launch (fault, eviction) deltas; thrashing()
+    holds while any eviction is in the last SIZE launches and clears
+    SIZE launches after the pressure stops."""
+    from repro.core.simulator import ThrashWindow
+    w = ThrashWindow()
+    w.observe(10, 0)                    # cumulative counters in, deltas kept
+    assert not w.thrashing() and w.n_thrash_steps == 0
+    w.observe(25, 3)                    # 3 evictions this launch
+    assert w.thrashing()
+    assert w.eviction_rate() == pytest.approx(3 / 2)
+    assert w.fault_rate() == pytest.approx((10 + 15) / 2)
+    faults = 25
+    for _ in range(ThrashWindow.SIZE):  # pressure stops: evictions stay 3
+        faults += 5
+        w.observe(faults, 3)
+    assert not w.thrashing()            # the eviction delta aged out
+    assert w.n_thrash_steps > 0
+
+
+# ---------------------------------------------------------------------------
+# thrash => graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_adaptive_advise_bounds_p9_oversubscribed_pathology():
+    """The paper's worst cell: P9 oversubscribed advise (per-page
+    re-duplication + pinned ping-pong).  The adaptive tier detects the
+    thrash and drops the advises, landing multiples faster — and its
+    report records both the thrash steps and the dropped duplicates."""
+    static = run_cell("bs", "um_advise", "p9-volta-nvlink",
+                      "oversubscribed").report
+    adaptive = run_cell("bs", "um_adaptive_advise", "p9-volta-nvlink",
+                        "oversubscribed").report
+    assert adaptive.total_s < static.total_s / 2
+    assert adaptive.thrash.n_thrash_steps > 0
+    assert adaptive.n_faults < static.n_faults
+
+
+def test_adaptive_advise_degrades_on_grace_hopper_too():
+    static = run_cell("cg", "um_advise", "grace-hopper-c2c",
+                      "oversubscribed").report
+    adaptive = run_cell("cg", "um_adaptive_advise", "grace-hopper-c2c",
+                        "oversubscribed").report
+    assert adaptive.total_s < static.total_s
+
+
+def test_unadvise_read_mostly_drops_duplicates_free():
+    """The degradation primitive: duplicates leave as free drops (no DtoH),
+    device_used shrinks, and the region faults like plain um afterwards."""
+    p = SimPlatform("t", 8 / 1024.0, 12.0, 500.0, 10.0, 45.0, False, True)
+    sim = UMSimulator(p)
+    sim.alloc("a", 4 * MB)
+    sim.advise_read_mostly("a")
+    sim.host_write("a")
+    sim.kernel("k", flops=1.0, reads=["a"], writes=[])   # duplicates a
+    used_before = sim.device_used
+    dtoh_before = sim.report.dtoh_bytes
+    sim.unadvise_read_mostly("a")
+    assert sim.device_used < used_before
+    assert sim.report.dtoh_bytes == dtoh_before          # free drop
+    assert sim.report.n_dropped > 0
+    assert not sim.regions["a"].read_mostly
+
+
+def test_unadvise_preferred_location_unpins_in_stamp_order():
+    p = SimPlatform("t", 8 / 1024.0, 12.0, 500.0, 10.0, 45.0, False, True)
+    sim = UMSimulator(p)
+    sim.alloc("a", 4 * MB)
+    sim.advise_preferred_location("a", MemorySpace.DEVICE)
+    sim.host_write("a")
+    sim.kernel("k", flops=1.0, reads=["a"], writes=[])
+    snap_before = sim.residency_snapshot()
+    sim.unadvise_preferred_location("a")
+    assert sim.regions["a"].preferred is None
+    # same members, now all in the unpinned queue, order preserved
+    assert sim.residency_snapshot() == snap_before
+    sim._debug_validate()
+
+
+# ---------------------------------------------------------------------------
+# injected faults: adaptive bounds the static tier's worst case
+# ---------------------------------------------------------------------------
+
+def test_adaptive_bounds_fault_storm_worst_case():
+    """Fast single-scenario slice of the table_degradation claim."""
+    clean = run_cell("bs", "um_advise", "p9-volta-nvlink",
+                     "oversubscribed").report.total_s
+    fs = run_cell("bs", "um_advise", "p9-volta-nvlink", "oversubscribed",
+                  faults="fault_storm").report.total_s
+    fa = run_cell("bs", "um_adaptive_advise", "p9-volta-nvlink",
+                  "oversubscribed", faults="fault_storm").report.total_s
+    assert fs / clean > 2.0            # the static tier degrades hard
+    assert fa < fs                     # the adaptive tier bounds it
+    assert fa / clean < 1.0            # ... below even the clean static
+
+
+@pytest.mark.slow
+def test_adaptive_bounds_worst_case_under_three_scenarios():
+    """The ISSUE 6 acceptance gate: >= 3 injected-fault scenarios where
+    the adaptive advise tier's worst cell (over traced apps x coherent
+    platforms) is strictly faster than the static tier's worst cell,
+    slowdowns measured against the clean static baseline."""
+    apps = ("bs", "cg", "fdtd3d")
+    plats = ("p9-volta-nvlink", "grace-hopper-c2c")
+    bounded = []
+    for scen in ("degraded_link", "fault_storm", "hostile"):
+        worst_static = worst_adaptive = 0.0
+        for app in apps:
+            for pname in plats:
+                clean = run_cell(app, "um_advise", pname,
+                                 "oversubscribed").report.total_s
+                fs = run_cell(app, "um_advise", pname, "oversubscribed",
+                              faults=scen).report.total_s
+                fa = run_cell(app, "um_adaptive_advise", pname,
+                              "oversubscribed", faults=scen).report.total_s
+                worst_static = max(worst_static, fs / clean)
+                worst_adaptive = max(worst_adaptive, fa / clean)
+        if worst_adaptive < worst_static:
+            bounded.append(scen)
+    assert len(bounded) >= 3, bounded
+
+
+# ---------------------------------------------------------------------------
+# the registry's docstring table stays honest
+# ---------------------------------------------------------------------------
+
+def test_adaptive_strategies_are_stateless_singletons():
+    """before_step reads only sim.report.thrash — two interleaved runs
+    through the same strategy object must not contaminate each other."""
+    s = var.get_strategy("um_adaptive_advise")
+    r1 = run_cell("bs", s, "p9-volta-nvlink", "oversubscribed").report
+    run_cell("bs", s, "intel-pascal-pcie", "in_memory")
+    r2 = run_cell("bs", s, "p9-volta-nvlink", "oversubscribed").report
+    assert dataclasses.asdict(r1) == dataclasses.asdict(r2)

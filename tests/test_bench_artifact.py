@@ -137,7 +137,7 @@ def test_sweep_workers_recorded_from_actual_pool(monkeypatch):
         calls["ext"] = kw.get("workers")
         return []
 
-    def fake_run_page(workers=None):
+    def fake_run_page(workers=None, **kw):
         calls["page"] = workers
         return []
 

@@ -1,0 +1,260 @@
+"""The §12 fault injector: off-parity against the pre-injection engine,
+per-cell determinism, and each pathology's accounting contract.
+
+The parity discipline mirrors tests/test_prefetch_schedule.py: with no
+injector attached — or with an attached injector whose scenario draws
+nothing — every SimReport is bit-identical (counters exact, times to 1e-9
+relative) to the plain engine, across the seed matrix.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import faults as fl
+from repro.core.simulator import GB, UMSimulator
+from repro.umbench import variants as var
+from repro.umbench.harness import REGIMES, WORKLOADS, run_cell
+from repro.umbench.platforms import PLATFORMS
+
+# every variant family on a PCIe and a coherent platform, both regimes —
+# the fast slice of the full-matrix slow test below
+SMOKE_CELLS = [
+    (app, variant, pname, regime)
+    for app in ("bs", "cg")
+    for variant in ("um", "um_advise", "um_prefetch", "um_both", "explicit")
+    for pname in ("intel-pascal-pcie", "p9-volta-nvlink")
+    for regime in ("in_memory", "oversubscribed")
+]
+
+ZERO_PROB = fl.FaultScenario("off")
+
+
+def _report(app, variant, pname, regime, injector=None):
+    p = PLATFORMS[pname]
+    strat = var.get_strategy(variant)
+    if not strat.available(p):
+        return None
+    wl = WORKLOADS[app](REGIMES[regime] * p.device_mem_gb * GB)
+    sim = UMSimulator(p)
+    if injector is not None:
+        sim.set_fault_injector(injector)
+    try:
+        strat.lower(wl, sim)
+    except Exception:
+        return None          # explicit oversubscribed: the cell is N/A
+    return sim.finish()
+
+
+def _assert_identical(a, b, ctx):
+    for k, va in dataclasses.asdict(a).items():
+        vb = getattr(b, k)
+        if isinstance(va, int):
+            assert va == vb, (k, va, vb, ctx)
+        else:
+            assert abs(va - vb) <= 1e-9 * max(1.0, abs(vb)), (k, va, vb, ctx)
+
+
+# ---------------------------------------------------------------------------
+# injector-off parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", SMOKE_CELLS, ids=lambda c: "-".join(c))
+def test_attached_zero_prob_injector_is_bit_identical(cell):
+    """Even with the injector object ATTACHED, a scenario that draws
+    nothing leaves every report field bit-identical — the injection sites
+    scale by exactly 1.0 and stall by exactly 0.0."""
+    clean = _report(*cell)
+    injected = _report(*cell, injector=fl.FaultInjector(ZERO_PROB, "x"))
+    if clean is None:
+        assert injected is None
+        return
+    _assert_identical(injected, clean, cell)
+    assert injected.n_retries == 0 and injected.retry_stall_s == 0.0
+    assert injected.n_degraded_xfers == 0 and injected.n_storm_faults == 0
+
+
+@pytest.mark.slow
+def test_injector_off_parity_full_seed_matrix():
+    """The ISSUE 6 acceptance gate: all 240 seed cells, zero-prob injector
+    attached vs none, bit-identical."""
+    for app in WORKLOADS:
+        for pname in ("intel-pascal-pcie", "intel-volta-pcie",
+                      "p9-volta-nvlink"):
+            for variant in ("explicit", "um", "um_advise", "um_prefetch",
+                            "um_both"):
+                for regime in ("in_memory", "oversubscribed"):
+                    cell = (app, variant, pname, regime)
+                    clean = _report(*cell)
+                    inj = _report(*cell,
+                                  injector=fl.FaultInjector(ZERO_PROB, "x"))
+                    if clean is None:
+                        assert inj is None, cell
+                        continue
+                    _assert_identical(inj, clean, cell)
+
+
+def test_disabled_scenario_never_attaches():
+    """run_cell with a zero-prob scenario labels the cell but runs the
+    plain engine (enabled() gates attachment)."""
+    assert not ZERO_PROB.enabled()
+    clean = run_cell("bs", "um", "intel-pascal-pcie", "oversubscribed")
+    labelled = run_cell("bs", "um", "intel-pascal-pcie", "oversubscribed",
+                        faults=ZERO_PROB)
+    assert labelled.faults == "off"
+    assert labelled.report == clean.report          # dataclass equality
+    assert labelled.row()["fault_scenario"] == "off"
+    assert "fault_scenario" not in clean.row()      # clean schema unchanged
+    assert "n_retries" not in clean.row()
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_injection_is_deterministic_per_cell():
+    a = run_cell("bs", "um", "p9-volta-nvlink", "oversubscribed",
+                 faults="hostile")
+    b = run_cell("bs", "um", "p9-volta-nvlink", "oversubscribed",
+                 faults="hostile")
+    assert a.report == b.report
+    assert a.report.n_retries > 0 or a.report.n_degraded_xfers > 0
+
+
+def test_salt_differentiates_cells():
+    """The same scenario injects differently on different cells (the salt
+    is the cell key), but identically for the same salt."""
+    s = fl.SCENARIOS["hostile"]
+    i1 = fl.FaultInjector(s, "bs:p:um:oversubscribed:group")
+    i2 = fl.FaultInjector(s, "cg:p:um:oversubscribed:group")
+    i3 = fl.FaultInjector(s, "bs:p:um:oversubscribed:group")
+    draws1 = [i1.transfer(1.0) for _ in range(32)]
+    draws2 = [i2.transfer(1.0) for _ in range(32)]
+    draws3 = [i3.transfer(1.0) for _ in range(32)]
+    assert draws1 == draws3
+    assert draws1 != draws2
+
+
+def test_seed_mix_is_hashseed_independent():
+    """blake2s, not hash(): the mixed seed is a pure function of its
+    inputs."""
+    assert fl._mix_seed(7, "a:b") == fl._mix_seed(7, "a:b")
+    assert fl._mix_seed(7, "a:b") != fl._mix_seed(7, "a:c")
+    assert fl._mix_seed(7, "a:b") != fl._mix_seed(8, "a:b")
+
+
+# ---------------------------------------------------------------------------
+# per-pathology contracts
+# ---------------------------------------------------------------------------
+
+class _FixedRng:
+    """Deterministic stand-in: pops pre-programmed uniform draws."""
+
+    def __init__(self, draws):
+        self.draws = list(draws)
+
+    def random(self):
+        return self.draws.pop(0)
+
+
+def test_degrade_window_scales_and_counts():
+    s = fl.FaultScenario("d", degrade_prob=0.5, degrade_factor=0.25,
+                         degrade_events=2)
+    inj = fl.FaultInjector(s)
+    inj.rng = _FixedRng([0.4, 0.9])   # opens on 1st draw; 3rd event re-draws
+    assert inj.transfer(1.0) == (4.0, 0.0)    # window event 1: 1/0.25
+    assert inj.transfer(1.0) == (4.0, 0.0)    # window event 2 (no draw)
+    assert inj.transfer(1.0) == (1.0, 0.0)    # window closed, draw misses
+    assert inj.n_degraded_xfers == 2
+
+
+def test_retry_backoff_doubles_and_resends():
+    s = fl.FaultScenario("f", fail_prob=0.5, max_retries=3,
+                         retry_backoff_us=100.0)
+    inj = fl.FaultInjector(s)
+    inj.rng = _FixedRng([0.1, 0.1, 0.9])      # fail, fail, succeed
+    scale, backoff = inj.transfer(2.0)
+    assert scale == 3.0                        # 2 failed attempts re-sent
+    assert backoff == pytest.approx((100 + 200) * 1e-6)
+    assert inj.n_retries == 2
+    assert inj.retry_stall_s == pytest.approx(backoff)
+
+
+def test_retries_are_bounded():
+    s = fl.FaultScenario("f", fail_prob=1.0, max_retries=2,
+                         retry_backoff_us=100.0)
+    inj = fl.FaultInjector(s)
+    scale, backoff = inj.transfer(1.0)
+    assert scale == 3.0                        # capped at max_retries
+    assert backoff == pytest.approx((100 + 200) * 1e-6)
+
+
+def test_storm_amplifies_fault_batches():
+    s = fl.FaultScenario("s", storm_prob=0.5, storm_factor=4.0,
+                         storm_events=2)
+    inj = fl.FaultInjector(s)
+    inj.rng = _FixedRng([0.2, 0.9])
+    assert inj.fault_events(10) == 40
+    assert inj.fault_events(3) == 12           # storm event 2, no draw
+    assert inj.fault_events(5) == 5            # closed; draw misses
+    assert inj.n_storm_faults == 30 + 9
+    assert inj.fault_events(0) == 0            # empty batches draw nothing
+
+
+def test_zero_prob_pathologies_draw_nothing():
+    """A storm-only scenario leaves the transfer RNG stream untouched (and
+    vice versa), so adding a pathology never perturbs another's draws."""
+    storm_only = fl.SCENARIOS["fault_storm"]
+    inj = fl.FaultInjector(storm_only, "x")
+    state = inj.rng.getstate()
+    assert inj.transfer(1.0) == (1.0, 0.0)
+    assert inj.rng.getstate() == state
+
+
+# ---------------------------------------------------------------------------
+# scenario effects surface in the report and the BENCH row
+# ---------------------------------------------------------------------------
+
+def _cell(faults=None):
+    return run_cell("bs", "um", "p9-volta-nvlink", "oversubscribed",
+                    faults=faults)
+
+
+def test_flaky_migration_accounts_retries():
+    clean, flaky = _cell(), _cell("flaky_migration")
+    r = flaky.report
+    assert r.n_retries > 0 and r.retry_stall_s > 0
+    assert r.n_degraded_xfers == 0 and r.n_storm_faults == 0
+    # backoff lands on stream clocks, re-sends on transfer seconds: total
+    # grows by at least the recorded stall
+    assert r.total_s > clean.report.total_s + r.retry_stall_s * 0.5
+
+
+def test_degraded_link_scales_transfers():
+    clean, deg = _cell(), _cell("degraded_link")
+    r = deg.report
+    assert r.n_degraded_xfers > 0 and r.n_retries == 0
+    assert r.total_s > clean.report.total_s
+    assert r.htod_s + r.dtoh_s > clean.report.htod_s + clean.report.dtoh_s
+
+
+def test_fault_storm_amplifies_fault_count():
+    clean, storm = _cell(), _cell("fault_storm")
+    r = storm.report
+    assert r.n_storm_faults > 0
+    assert r.n_faults > clean.report.n_faults
+    assert r.fault_stall_s > clean.report.fault_stall_s
+
+
+def test_injected_row_schema():
+    row = _cell("hostile").row()
+    assert row["fault_scenario"] == "hostile"
+    for k in ("n_retries", "retry_stall_s", "n_degraded_xfers",
+              "n_storm_faults"):
+        assert k in row
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError, match="unknown fault scenario"):
+        fl.get_scenario("nope")
+    assert set(fl.scenario_names()) == {
+        "degraded_link", "flaky_migration", "fault_storm", "hostile"}

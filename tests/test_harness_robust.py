@@ -1,0 +1,236 @@
+"""The §12 crash-safe sweep harness: per-cell failure records, wall-clock
+timeouts, worker-crash isolation with bounded retry, and the journaled
+checkpoint that lets an interrupted sweep resume without re-running
+completed cells (the CI sweep-interruption smoke drives the same path
+through a real SIGTERM).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.umbench import variants as var
+from repro.umbench.harness import (
+    CellResult,
+    matrix_specs,
+    run_cell,
+    run_matrix,
+    run_specs,
+)
+from repro.umbench.journal import SweepJournal, cell_key
+
+
+class BoomStrategy(var.UMStrategy):
+    """Raises mid-lowering: the in-cell failure path."""
+    name = "boom"
+
+    def stage(self, sim, workload):
+        raise RuntimeError("kaboom")
+
+
+class KillerStrategy(var.UMStrategy):
+    """Kills its worker process outright: the pool-crash path."""
+    name = "killer"
+
+    def stage(self, sim, workload):
+        os._exit(17)
+
+
+# ---------------------------------------------------------------------------
+# per-cell failure records
+# ---------------------------------------------------------------------------
+
+def test_exception_becomes_failure_record():
+    cell = run_cell("bs", BoomStrategy(), "intel-pascal-pcie", "in_memory")
+    assert cell.report is None
+    assert cell.error == "RuntimeError: kaboom"
+    assert (cell.app, cell.platform, cell.variant, cell.regime) == (
+        "bs", "intel-pascal-pcie", "boom", "in_memory")
+    assert cell.row()["error"] == "RuntimeError: kaboom"
+    assert "error" not in run_cell("bs", "um", "intel-pascal-pcie",
+                                   "in_memory").row()
+
+
+def test_unknown_registry_names_still_raise():
+    """Registry typos are caller bugs, not per-cell failures."""
+    with pytest.raises(KeyError):
+        run_cell("bs", "no_such_variant", "intel-pascal-pcie", "in_memory")
+    with pytest.raises(KeyError):
+        run_cell("no_such_app", "um", "intel-pascal-pcie", "in_memory")
+
+
+def test_cell_timeout_records_and_disarms():
+    slow = run_cell("graph500", "um", "p9-volta-nvlink", "oversubscribed",
+                    granularity="page", timeout_s=0.005)
+    assert slow.report is None
+    assert slow.error == "timeout after 0.005s"
+    # the timer is disarmed afterwards: a fast cell right after is clean
+    ok = run_cell("bs", "um", "intel-pascal-pcie", "in_memory",
+                  timeout_s=60.0)
+    assert ok.report is not None and ok.error is None
+
+
+# ---------------------------------------------------------------------------
+# worker crashes are isolated and retried
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_isolated_from_sweep():
+    specs = [
+        ("bs", "intel-pascal-pcie", "um", "in_memory", "group"),
+        ("bs", "intel-pascal-pcie", KillerStrategy(), "in_memory", "group"),
+        ("cg", "intel-pascal-pcie", "um", "in_memory", "group"),
+    ]
+    t0 = time.monotonic()
+    res = run_specs(specs, workers=2, retries=1, retry_backoff_s=0.01)
+    assert time.monotonic() - t0 < 120
+    assert [c.variant for c in res] == ["um", "killer", "um"]
+    assert res[1].report is None
+    assert res[1].error == "worker crashed (2 attempts)"
+    # the innocent casualties of the crashed pool generations survived
+    serial = [run_cell("bs", "um", "intel-pascal-pcie", "in_memory"),
+              run_cell("cg", "um", "intel-pascal-pcie", "in_memory")]
+    assert res[0].row() == serial[0].row()
+    assert res[2].row() == serial[1].row()
+
+
+# ---------------------------------------------------------------------------
+# the journal
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_bit_identical(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    cells = run_matrix(apps=["bs"], platform_names=("intel-pascal-pcie",),
+                       regimes=("in_memory",), variants=("um", "explicit"))
+    with SweepJournal(path) as j:
+        for c in cells:
+            j.record(c)
+    j2 = SweepJournal(path)
+    for c in cells:
+        back = j2.completed[cell_key(c)]
+        assert back.report == c.report          # full-precision dataclass ==
+        assert back.row() == c.row()
+    assert j2.reused == 0
+
+
+def test_journal_skips_torn_final_line(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    cell = run_cell("bs", "um", "intel-pascal-pcie", "in_memory")
+    with SweepJournal(path) as j:
+        j.record(cell)
+        j.record(cell)
+    with open(path) as f:
+        lines = f.readlines()
+    with open(path, "w") as f:
+        f.write(lines[0])
+        f.write(lines[1][: len(lines[1]) // 2])   # the crash-torn tail
+    j2 = SweepJournal(path)
+    assert list(j2.completed) == [cell_key(cell)]
+
+
+def test_journal_treats_failures_as_incomplete(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    failed = run_cell("bs", BoomStrategy(), "intel-pascal-pcie", "in_memory")
+    ok = run_cell("bs", "um", "intel-pascal-pcie", "in_memory")
+    with SweepJournal(path) as j:
+        j.record(failed)
+        j.record(ok)
+    j2 = SweepJournal(path)
+    assert cell_key(ok) in j2.completed
+    assert cell_key(failed) not in j2.completed   # retried on resume
+
+
+def test_fresh_journal_truncates_stale_file(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with SweepJournal(path) as j:
+        j.record(run_cell("bs", "um", "intel-pascal-pcie", "in_memory"))
+    j2 = SweepJournal(path, resume=False)
+    assert j2.completed == {}
+    j2.close()
+    assert SweepJournal(path).completed == {}     # the file really went
+
+
+def test_resume_runs_only_incomplete_cells(tmp_path):
+    """The acceptance gate, in-process: journal a subset, then hand the
+    journal to the full sweep — exactly the missing cells run."""
+    path = str(tmp_path / "j.jsonl")
+    specs = matrix_specs(apps=["bs", "cg"],
+                         platform_names=("intel-pascal-pcie",),
+                         regimes=("in_memory", "oversubscribed"))
+    subset, rest = specs[:5], specs[5:]
+    with SweepJournal(path) as j:
+        run_specs(subset, journal=j)
+        assert (j.reused, j.ran) == (0, len(subset))
+    with SweepJournal(path) as j2:
+        res = run_specs(specs, journal=j2)
+        assert (j2.reused, j2.ran) == (len(subset), len(rest))
+    assert [c.row() for c in res] == [c.row() for c in run_specs(specs)]
+
+
+def test_journaled_faulty_cells_key_on_scenario(tmp_path):
+    """The same cell under different scenarios journals as different keys —
+    a resume must never answer an injected cell with a clean one."""
+    path = str(tmp_path / "j.jsonl")
+    clean = run_cell("bs", "um", "p9-volta-nvlink", "oversubscribed")
+    storm = run_cell("bs", "um", "p9-volta-nvlink", "oversubscribed",
+                     faults="fault_storm")
+    assert cell_key(clean) != cell_key(storm)
+    with SweepJournal(path) as j:
+        j.record(clean)
+        j.record(storm)
+    j2 = SweepJournal(path)
+    assert j2.completed[cell_key(storm)].report == storm.report
+    assert j2.completed[cell_key(clean)].report == clean.report
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM mid-sweep, then resume (the CI interruption smoke's engine)
+# ---------------------------------------------------------------------------
+
+_SWEEP_SCRIPT = textwrap.dedent("""
+    import sys
+    from repro.umbench.harness import matrix_specs, run_specs
+    from repro.umbench.journal import SweepJournal
+    specs = matrix_specs(platform_names=("p9-volta-nvlink",),
+                         regimes=("oversubscribed",), granularity="page")
+    with SweepJournal(sys.argv[1], resume=True) as j:
+        run_specs(specs, journal=j)
+    print("COMPLETE", j.reused, j.ran)
+""")
+
+
+def test_sigterm_interrupt_then_resume(tmp_path):
+    """Start a (page-granularity, hence slow) sweep in a subprocess, SIGTERM
+    it mid-flight, and resume: the journaled cells are replayed, not
+    re-run, and the resumed sweep completes the rest."""
+    path = str(tmp_path / "sweep.jsonl")
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.Popen([sys.executable, "-c", _SWEEP_SCRIPT, path],
+                            env=env, cwd=os.path.dirname(
+                                os.path.dirname(os.path.abspath(__file__))))
+    deadline = time.monotonic() + 120
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            pytest.fail("sweep finished before it could be interrupted")
+        if os.path.exists(path) and sum(1 for _ in open(path)) >= 3:
+            break
+        time.sleep(0.05)
+    proc.send_signal(signal.SIGTERM)
+    proc.wait(timeout=60)
+    assert proc.returncode != 0                  # it really died mid-sweep
+    done_before = [tuple(json.loads(l)["key"]) for l in open(path)
+                   if l.endswith("\n")]          # fsync'd complete lines
+    assert done_before                           # progress was checkpointed
+    from repro.umbench.harness import matrix_specs as ms
+    specs = ms(platform_names=("p9-volta-nvlink",),
+               regimes=("oversubscribed",), granularity="page")
+    with SweepJournal(path, resume=True) as j:
+        res = run_specs(specs, journal=j)
+        assert j.reused == len(done_before)      # completed cells NOT re-run
+        assert j.ran == len(specs) - len(done_before)
+    assert len(res) == len(specs)
+    assert all(c.report is not None or c.variant == "explicit" for c in res)

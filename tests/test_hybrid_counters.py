@@ -40,6 +40,8 @@ GATES = {
     "um_pinned_zero_copy": lambda p: p.device_can_access_host,
     "um_prefetch_pipelined": lambda p: True,
     "um_both_pipelined": lambda p: True,
+    "um_adaptive_advise": lambda p: True,
+    "um_prefetch_adaptive": lambda p: True,
 }
 
 

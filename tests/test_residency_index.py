@@ -14,7 +14,9 @@ Three layers:
 
 Runs with or without hypothesis: the seeded-random scenario tests always
 execute; hypothesis variants deepen the search when the dev extra is
-installed.
+installed.  The seeded suites draw through tests/_seeds.py, so
+``UMBENCH_TEST_SEED=N`` shifts every trace and failures print the exact
+seed to replay.
 """
 import random
 
@@ -25,6 +27,8 @@ try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # collection must not error (dev-only dependency)
     from _hypothesis_fallback import given, settings, st
+
+from _seeds import seed_note, seeded_rng
 
 from repro.core import seed_simulator
 from repro.core import simulator as vec
@@ -93,14 +97,17 @@ def _random_runs(rng, max_runs=4, max_count=12):
 @pytest.mark.slow
 @pytest.mark.parametrize("seed", range(200))
 def test_merge_runs_matches_chunk_reference_random(seed):
-    rng = random.Random(seed)
+    rng = seeded_rng(seed)
     own = _random_runs(rng)
     if not len(own[0]):
         own = (np.array([4], dtype=np.int64), np.array([3], dtype=np.int64))
     un = _random_runs(rng)
     pin = _random_runs(rng)
     free = rng.randint(0, 40)
-    _check_merge_equiv(own, un, pin, free, rng.random() < 0.5)
+    try:
+        _check_merge_equiv(own, un, pin, free, rng.random() < 0.5)
+    except AssertionError as e:
+        raise AssertionError(f"{e} [{seed_note(seed)}]") from None
 
 
 def test_merge_runs_uniform_thrash():
@@ -232,7 +239,8 @@ def test_index_pop_order_tracks_seed_queues(seed):
     """After every op of a random trace, the vectorized engine's
     residency_snapshot equals the seed's literal queue contents, and the
     index invariants hold."""
-    rng = random.Random(seed)
+    rng = seeded_rng(seed)
+    note = seed_note(seed)
     plat, ops = _random_scenario(rng, coherent=seed % 2 == 0)
     sv = vec.UMSimulator(plat)
     ss = seed_simulator.UMSimulator(plat)
@@ -246,10 +254,10 @@ def test_index_pop_order_tracks_seed_queues(seed):
             _apply(ss, op)
         except OversubscriptionError as e:
             err_s = e
-        assert (err_v is None) == (err_s is None), op
+        assert (err_v is None) == (err_s is None), (op, note)
         sv._debug_validate()
-        assert sv.residency_snapshot() == _seed_snapshot(ss), op
-        assert sv.device_used == ss.device_used, op
+        assert sv.residency_snapshot() == _seed_snapshot(ss), (op, note)
+        assert sv.device_used == ss.device_used, (op, note)
         if err_v is not None:
             break
 
@@ -259,7 +267,8 @@ def test_index_pop_order_tracks_seed_queues(seed):
 def test_index_counters_track_seed_through_scenarios(seed):
     """Full-report parity on random traces (counter-exact, 1e-9 times)."""
     import dataclasses
-    rng = random.Random(1000 + seed)
+    rng = seeded_rng(1000 + seed)
+    note = seed_note(1000 + seed)
     plat, ops = _random_scenario(rng, coherent=seed % 2 == 1)
     sv = vec.UMSimulator(plat)
     ss = seed_simulator.UMSimulator(plat)
@@ -274,7 +283,7 @@ def test_index_counters_track_seed_through_scenarios(seed):
             _apply(ss, op)
         except OversubscriptionError as e:
             err_s = e
-        assert (err_v is None) == (err_s is None), op
+        assert (err_v is None) == (err_s is None), (op, note)
         if err_v is not None:
             raised = True
             break
@@ -282,10 +291,10 @@ def test_index_counters_track_seed_through_scenarios(seed):
     w = dataclasses.asdict(ss.finish())
     for k in ("htod_bytes", "dtoh_bytes", "remote_bytes", "n_faults",
               "n_evictions", "n_dropped"):
-        assert int(g[k]) == int(w[k]), (k, raised)
+        assert int(g[k]) == int(w[k]), (k, raised, note)
     for k in ("compute_s", "fault_stall_s", "htod_s", "dtoh_s", "remote_s",
               "total_s"):
-        assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), k
+        assert abs(g[k] - w[k]) <= 1e-9 * max(1.0, abs(w[k])), (k, note)
 
 
 def test_wrapped_partial_touch_reorders_tail_entry():

@@ -29,7 +29,8 @@ def test_extended_matrix_definitions():
     assert EXTENDED_VARIANTS == VARIANTS + BEYOND_PAPER_VARIANTS
     assert BEYOND_PAPER_VARIANTS == (
         "svm_remote", "um_hybrid_counters", "um_pinned_zero_copy",
-        "um_prefetch_pipelined", "um_both_pipelined")
+        "um_prefetch_pipelined", "um_both_pipelined",
+        "um_adaptive_advise", "um_prefetch_adaptive")
 
 
 def test_grace_hopper_from_run_matrix():
