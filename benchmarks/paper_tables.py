@@ -378,6 +378,108 @@ def table_degradation() -> list[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Serving sweep (DESIGN.md §13): continuous-batching LM inference with a
+# UM-managed KV cache, traffic pattern x variant tier x KV-oversubscription
+# regime, plus a fault-composed block (degraded_link under the diurnal peak)
+# ---------------------------------------------------------------------------
+
+SERVING_PATTERNS = ("poisson", "bursty", "diurnal")
+# the PCIe card and the coherent-NVLink machine: the two 16 GB platforms
+# where the kv_150/kv_200 budgets actually exceed device memory
+# (grace-hopper's 96 GB swallows the whole trace, so it has no serving axis)
+SERVING_PLATFORMS = ("intel-volta-pcie", "p9-volta-nvlink")
+SERVING_FAULT_SCENARIO = "degraded_link"
+SERVING_FAULT_PATTERN = "diurnal"
+
+_SERVING: list | None = None
+_SERVING_FAULTS: list | None = None
+
+
+def serving_cells(workers: int | None = None) -> list:
+    """The (memoized) clean serving sweep: every registry variant x traffic
+    pattern x KV regime on both serving platforms, pooled and journaled
+    like the matrix sweeps."""
+    global _SERVING, LAST_SWEEP_WORKERS
+    if _SERVING is None:
+        from repro.umbench.serving import (
+            SERVING_REGIMES,
+            run_serving_specs,
+            serving_specs,
+        )
+        specs = serving_specs(SERVING_PATTERNS, SERVING_PLATFORMS,
+                              tuple(SERVING_REGIMES))
+        LAST_SWEEP_WORKERS = workers or default_workers()
+        journal = _journal("serving")
+        try:
+            _SERVING = run_serving_specs(specs, workers=LAST_SWEEP_WORKERS,
+                                         journal=journal)
+        finally:
+            _close_journal("serving", journal)
+    return _SERVING
+
+
+def serving_fault_cells(workers: int | None = None) -> list:
+    """The (memoized) fault-composed serving block: ``degraded_link`` firing
+    under the diurnal pattern's peak on the coherent platform, both
+    oversubscribed KV regimes, every registry variant."""
+    global _SERVING_FAULTS, LAST_SWEEP_WORKERS
+    if _SERVING_FAULTS is None:
+        from repro.umbench.serving import run_serving_specs, serving_specs
+        specs = serving_specs((SERVING_FAULT_PATTERN,), ("p9-volta-nvlink",),
+                              ("kv_150", "kv_200"),
+                              faults=SERVING_FAULT_SCENARIO)
+        LAST_SWEEP_WORKERS = workers or default_workers()
+        journal = _journal("serving_faults")
+        try:
+            _SERVING_FAULTS = run_serving_specs(
+                specs, workers=LAST_SWEEP_WORKERS, journal=journal)
+        finally:
+            _close_journal("serving_faults", journal)
+    return _SERVING_FAULTS
+
+
+def table_serving() -> list[str]:
+    """Serving-tier latency/goodput per cell (DESIGN.md §13): TTFT and
+    end-to-end percentiles over per-request stream-clock timelines, goodput
+    over the trace makespan, and the UM traffic that produced them.  The
+    trailing fault-composed rows re-run the diurnal trace with the
+    ``degraded_link`` scenario live and carry ``goodput_vs_clean`` against
+    the same clean cell — the serving-level cost of a degraded
+    interconnect, per tier."""
+    clean = {(c.app, c.platform, c.regime, c.variant): c
+             for c in serving_cells()}
+    rows = ["table,pattern,platform,regime,variant,scenario,total_s,"
+            "completed,goodput_rps,tokens_per_s,ttft_p50_s,ttft_p95_s,"
+            "ttft_p99_s,e2e_p50_s,e2e_p99_s,queue_p99_s,evictions,"
+            "goodput_vs_clean"]
+
+    def fmt(cell, scenario: str, ratio: str) -> str:
+        pat = cell.app[len("serve_"):]
+        r = cell.report
+        if r is None:
+            body = ",".join(["NA"] * 11)
+        else:
+            body = (f"{r.total_s:.4f},{r.completed},{r.goodput_rps:.4f},"
+                    f"{r.tokens_per_s:.2f},{r.ttft_p50_s:.4f},"
+                    f"{r.ttft_p95_s:.4f},{r.ttft_p99_s:.4f},"
+                    f"{r.e2e_p50_s:.4f},{r.e2e_p99_s:.4f},"
+                    f"{r.queue_p99_s:.4f},{r.sim.n_evictions}")
+        return (f"serving,{pat},{cell.platform},{cell.regime},{cell.variant},"
+                f"{scenario},{body},{ratio}")
+
+    for c in serving_cells():
+        rows.append(fmt(c, "clean", "NA"))
+    for c in serving_fault_cells():
+        base = clean.get((c.app, c.platform, c.regime, c.variant))
+        ratio = "NA"
+        if (c.report is not None and base is not None
+                and base.report is not None and base.report.goodput_rps):
+            ratio = f"{c.report.goodput_rps / base.report.goodput_rps:.2f}"
+        rows.append(fmt(c, c.faults, ratio))
+    return rows
+
+
 def table_working_sets() -> list[str]:
     rows = ["table,platform,regime,working_set_gb"]
     for plat in PLATS:

@@ -11,6 +11,8 @@ Emits, as CSV blocks:
   page          full-matrix 64 KB page-granularity sweep [not --fast]
   degradation   injected-fault scenarios x adaptive-vs-static tiers (§12)
                 [not --fast]
+  serving       continuous-batching serving tier: traffic x variant x KV
+                regime latency/goodput (§13) [not --fast]
   table1        working-set sizing
   lm            per-arch reduced train/decode step timings (real CPU)
   kernel        Pallas-kernel call timings (interpret mode) vs jnp oracle
@@ -82,25 +84,43 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
     present in both artifacts can appear under ``changed``.  Prior-artifact
     rows without a usable key (older schema) are unmatchable: they count as
     removed, and current cells they would have matched count as new — the
-    diff degrades instead of raising."""
+    diff degrades instead of raising.
+
+    Failure records are labelled, never diffed: a row carrying ``error``
+    (a timed-out/crashed cell, possibly transient) lands under ``errored``
+    with ``cells_error`` counting them, on either side of the diff — a
+    current error cell is not "changed" (its None total vs a number is a
+    failure, not a perf delta) and a prior error cell that vanished is not
+    "removed" (coverage did not shrink; a failure stopped recurring)."""
     prev = {}
+    prev_err: set = set()
     for r in prev_cells:
         key = _cell_key(r)
-        if key is not None:
+        if key is None:
+            continue
+        if isinstance(r, dict) and r.get("error") is not None:
+            prev_err.add(key)
+        else:
             prev[key] = r.get("total_s")
-    unmatchable_prev = len(prev_cells) - len(prev)
+    unmatchable_prev = len(prev_cells) - len(prev) - len(prev_err)
     cur_keys = {k for k in (_cell_key(r) for r in cells) if k is not None}
     # axis values swept now but never by the predecessor — the newly added
     # variants/columns whose cells are "new", never "changed"
     new_axis_values = {}
+    prev_axis_keys = set(prev) | prev_err
     for i, field in enumerate(_KEY_FIELDS):
-        fresh = sorted({k[i] for k in cur_keys} - {k[i] for k in prev})
+        fresh = sorted({k[i] for k in cur_keys} - {k[i] for k in prev_axis_keys})
         if fresh:
             new_axis_values[field] = fresh
     changed = []
+    errored = []
     compared = 0
     for row in cells:
         key = _cell_key(row)
+        if isinstance(row, dict) and row.get("error") is not None:
+            errored.append({"cell": None if key is None else list(key),
+                            "error": row["error"]})
+            continue
         if key is None or key not in prev:
             continue
         compared += 1
@@ -116,11 +136,15 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
     return {
         "cells_compared": compared,
         "cells_changed": len(changed),
-        "cells_new": len(cells) - compared,
+        "cells_new": len(cells) - compared - len(errored),
+        "cells_error": len(errored),
         "new_axis_values": new_axis_values,
         # cells the predecessor had but this sweep lost — a non-zero count
-        # means matrix coverage shrank, not that performance held
+        # means matrix coverage shrank, not that performance held (error
+        # records on either side never count here: a failure is not
+        # coverage, and a failure that stopped recurring is not a loss)
         "cells_removed": len(set(prev) - cur_keys) + unmatchable_prev,
+        "errored": errored,
         "changed": changed,
     }
 
@@ -158,6 +182,7 @@ def main() -> None:
         timed("psched", paper_tables.table_prefetch_pipeline)
         timed("page", paper_tables.table_page_granularity)
         timed("degradation", paper_tables.table_degradation)
+        timed("serving", paper_tables.table_serving)
         timed("kernel", lm_bench.kernel_rows)
         timed("lm", lm_bench.arch_step_rows)
     timed("roofline", roofline.roofline_rows)
@@ -183,7 +208,12 @@ def main() -> None:
         # recorded 1 while run_matrix's pool sat unused.
         cells = paper_tables.matrix_cells(extended=not fast)
         if not fast:
-            cells = cells + paper_tables.page_cells()
+            # clean serving cells only: the fault-composed block shares the
+            # 5-field cell key with its clean counterparts, and the BENCH
+            # cell list (like the degradation sweep before it) carries one
+            # row per key
+            cells = (cells + paper_tables.page_cells()
+                     + paper_tables.serving_cells())
         sweep_workers = (paper_tables.LAST_SWEEP_WORKERS or 1) if not fast \
             else 1
         rows = [c.row() for c in cells]

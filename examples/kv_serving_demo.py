@@ -1,0 +1,33 @@
+"""Serving-tier demo (DESIGN.md §13): one short Poisson trace of LM
+inference requests, continuous-batched over the UM simulator with the KV
+cache as UM regions, across four memory tiers and two KV regimes — watch
+which tier keeps tail latency flat once the aggregate KV oversubscribes
+device memory.
+
+    PYTHONPATH=src python examples/kv_serving_demo.py
+"""
+from repro.umbench.serving import get_pattern, run_serving_cell
+
+TIERS = ("um", "um_prefetch_pipelined", "um_hybrid_counters",
+         "um_pinned_zero_copy")
+PLATFORM = "p9-volta-nvlink"
+
+pat = get_pattern("poisson")
+print(f"trace: {pat.n_requests} requests, ~{pat.rate_rps:.0f} rps poisson, "
+      f"prompt~{pat.prompt_mean} gen~{pat.gen_mean} tokens, on {PLATFORM}")
+for regime in ("kv_100", "kv_200"):
+    print(f"\n--- {regime} "
+          f"({'at-capacity' if regime == 'kv_100' else '2x KV oversub'}) ---")
+    print(f"  {'tier':22s} {'ttft_p99':>9s} {'e2e_p99':>9s} "
+          f"{'goodput':>8s} {'evictions':>10s}")
+    for tier in TIERS:
+        cell = run_serving_cell("poisson", tier, PLATFORM, regime)
+        r = cell.report
+        if r is None:
+            print(f"  {tier:22s} {'N/A':>9s}")
+            continue
+        print(f"  {tier:22s} {r.ttft_p99_s:8.3f}s {r.e2e_p99_s:8.3f}s "
+              f"{r.goodput_rps:7.2f}r {r.sim.n_evictions:>10d}")
+print("\n(TTFT/e2e are simulated stream-clock seconds; the remote tiers "
+      "dodge\n eviction churn entirely, the counter hybrid migrates only "
+      "proven-hot\n KV blocks, and plain UM pays the full thrash.)")

@@ -355,6 +355,25 @@ class UMSimulator:
         self.regions[name] = r
         return r
 
+    def free(self, name: str) -> None:
+        """``cudaFree`` for a managed region: every device-resident chunk is
+        released *without* a transfer — the data is discarded, not migrated,
+        so no clock moves and nothing is charged to dtoh — and the name is
+        forgotten.  The dead Region keeps its slot in the allocation list
+        (residency-index run entries encode region slots), but with no live
+        queue entries it can never be chosen as an eviction victim.  The
+        serving tier (umbench/serving) retires each request's KV blocks
+        through here as the request leaves the running batch."""
+        r = self.regions.pop(name)
+        ids = np.nonzero(r.resident_mask())[0]
+        if len(ids):
+            self.device_used -= int(r.sizes[ids].sum())
+            self._index_remove(r, ids)
+            r.on_device[ids] = False
+            r.duplicated[ids] = False
+            self._pf_clear(r, ids)
+        r.populated[:] = False
+
     def advise_read_mostly(self, name: str) -> None:
         self.regions[name].read_mostly = True
 

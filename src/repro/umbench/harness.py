@@ -190,13 +190,25 @@ def _cell_deadline(seconds: float | None):
     def _alarm(signum, frame):
         raise CellTimeout
 
-    old = signal.signal(signal.SIGALRM, _alarm)
-    signal.setitimer(signal.ITIMER_REAL, seconds)
+    old_handler = signal.signal(signal.SIGALRM, _alarm)
+    # setitimer returns the PREVIOUS timer (remaining_s, interval_s): an
+    # ambient/nested deadline that was already ticking.  Zeroing the timer
+    # on exit would silently disarm it — restore it instead, minus the time
+    # this block consumed (clamped to "fire asap" when it already expired
+    # under us, since our handler swallowed the delivery).
+    old_delay, old_interval = signal.setitimer(signal.ITIMER_REAL, seconds)
+    t0 = time.monotonic()
     try:
         yield
     finally:
+        # disarm OUR timer before swapping handlers back (a late fire must
+        # never land on the restored handler), then re-arm the previous one
         signal.setitimer(signal.ITIMER_REAL, 0.0)
-        signal.signal(signal.SIGALRM, old)
+        signal.signal(signal.SIGALRM, old_handler)
+        if old_delay:
+            remaining = old_delay - (time.monotonic() - t0)
+            signal.setitimer(signal.ITIMER_REAL, max(remaining, 1e-6),
+                             old_interval)
 
 
 def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
@@ -302,9 +314,16 @@ def matrix_specs(apps=None, platform_names=DEFAULT_PLATFORMS,
 
 def run_specs(specs: list[tuple], workers: int | None = None,
               retries: int = 2, retry_backoff_s: float = 0.5,
-              journal=None) -> list[CellResult]:
+              journal=None, runner=None, failure=None) -> list[CellResult]:
     """Run a list of cell specs (5- or 7-tuples, see ``_run_cell_spec``),
     returning results in spec order.
+
+    ``runner``/``failure`` plug a different cell family into the same
+    robust sweep: ``runner(spec) -> cell`` (top-level, picklable — the
+    default is ``_run_cell_spec``) and ``failure(spec, reason) -> cell``
+    build that family's results; the serving sweep
+    (``umbench.serving.sweep``) reuses pooling, retry, and journaling this
+    way, with specs of the same positional shape.
 
     The robust sweep core (DESIGN.md §12): cells already present in
     ``journal`` (a ``journal.SweepJournal``) are replayed from disk
@@ -318,6 +337,8 @@ def run_specs(specs: list[tuple], workers: int | None = None,
     and timeouts never reach this layer — ``run_cell`` already converts
     them to failure records.
     """
+    runner = _run_cell_spec if runner is None else runner
+    failure = _failure_cell if failure is None else failure
     results: dict[int, CellResult] = {}
     pending: list[int] = []
     for i, s in enumerate(specs):
@@ -349,7 +370,7 @@ def run_specs(specs: list[tuple], workers: int | None = None,
                     futs = {}
                     try:
                         for i in pending:
-                            futs[pool.submit(_run_cell_spec, rspecs[i])] = i
+                            futs[pool.submit(runner, rspecs[i])] = i
                     except BrokenProcessPool:
                         pass        # pool died mid-submit: the unsubmitted
                     #                 cells fall through to `crashed` below
@@ -363,8 +384,8 @@ def run_specs(specs: list[tuple], workers: int | None = None,
                             crashed.append(i)
                             continue
                         except Exception as e:  # noqa: BLE001 — unpicklable
-                            cell = _failure_cell(rspecs[i],
-                                                 f"{type(e).__name__}: {e}")
+                            cell = failure(rspecs[i],
+                                           f"{type(e).__name__}: {e}")
                         _done(i, cell)
             else:
                 # retry casualties one per single-worker pool: a cell that
@@ -373,20 +394,19 @@ def run_specs(specs: list[tuple], workers: int | None = None,
                 for i in pending:
                     with ProcessPoolExecutor(max_workers=1) as pool:
                         try:
-                            cell = pool.submit(_run_cell_spec,
-                                               rspecs[i]).result()
+                            cell = pool.submit(runner, rspecs[i]).result()
                         except BrokenProcessPool:
                             crashed.append(i)
                             continue
                         except Exception as e:  # noqa: BLE001
-                            cell = _failure_cell(rspecs[i],
-                                                 f"{type(e).__name__}: {e}")
+                            cell = failure(rspecs[i],
+                                           f"{type(e).__name__}: {e}")
                     _done(i, cell)
             pending = []
             for i in crashed:
                 attempts[i] += 1
                 if attempts[i] > retries:
-                    _done(i, _failure_cell(
+                    _done(i, failure(
                         rspecs[i],
                         f"worker crashed ({attempts[i]} attempts)"))
                 else:
@@ -396,7 +416,7 @@ def run_specs(specs: list[tuple], workers: int | None = None,
                 round_no += 1
     else:
         for i in pending:
-            _done(i, _run_cell_spec(specs[i]))
+            _done(i, runner(specs[i]))
     return [results[i] for i in range(len(specs))]
 
 

@@ -76,12 +76,24 @@ class SweepJournal:
                 if rec.get("error") is not None:
                     continue        # failures are incomplete: retry them
                 rep = rec.get("report")
-                cell = CellResult(
-                    app=rec["key"][0], platform=rec["key"][1],
-                    variant=rec["key"][2], regime=rec["key"][3],
-                    report=None if rep is None else SimReport.from_json_dict(rep),
-                    granularity=rec["key"][4], faults=rec["key"][5],
-                )
+                if rec.get("kind") == "serving":
+                    from repro.umbench.serving.metrics import ServingReport
+                    from repro.umbench.serving.sweep import ServingCellResult
+                    cell = ServingCellResult(
+                        app=rec["key"][0], platform=rec["key"][1],
+                        variant=rec["key"][2], regime=rec["key"][3],
+                        report=(None if rep is None
+                                else ServingReport.from_json_dict(rep)),
+                        granularity=rec["key"][4], faults=rec["key"][5],
+                    )
+                else:
+                    cell = CellResult(
+                        app=rec["key"][0], platform=rec["key"][1],
+                        variant=rec["key"][2], regime=rec["key"][3],
+                        report=(None if rep is None
+                                else SimReport.from_json_dict(rep)),
+                        granularity=rec["key"][4], faults=rec["key"][5],
+                    )
                 self.completed[tuple(rec["key"])] = cell
 
     # -- append ----------------------------------------------------------------
@@ -93,6 +105,11 @@ class SweepJournal:
                        else cell.report.to_json_dict()),
             "error": getattr(cell, "error", None),
         }
+        kind = getattr(cell, "journal_kind", "cell")
+        if kind != "cell":
+            rec["kind"] = kind  # e.g. "serving": reconstructed as its own
+        #                         cell family on load; absent = matrix cell,
+        #                         so pre-existing journals load unchanged
         self._fh.write(json.dumps(rec) + "\n")
         self._fh.flush()
         os.fsync(self._fh.fileno())

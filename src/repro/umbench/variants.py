@@ -153,6 +153,30 @@ class VariantStrategy:
     def read_result(self, sim: UMSimulator, name: str) -> None:
         sim.host_read(name)
 
+    # -- serving hooks (DESIGN.md §13) -----------------------------------------
+    # The serving tier has no static Workload trace to lower — regions appear
+    # and disappear with requests — so the continuous-batching scheduler
+    # drives these three hooks instead of ``lower``.  ``on_alloc`` is shared:
+    # the scheduler calls it for every region (weights and each KV block), so
+    # the role-based tiers (svm_remote, um_hybrid_counters,
+    # um_pinned_zero_copy) behave identically in both worlds for free.
+
+    def serving_stage(self, sim: UMSimulator, name: str) -> None:
+        """Called once after the (host-initialized) weights region exists —
+        the serving analogue of the workload staging point."""
+
+    def serving_admit(self, sim: UMSimulator, name: str) -> None:
+        """Called for each KV block right after its allocation.  The block
+        is virgin — the prefill/decode kernels populate it device-side — so
+        the default (and the prefetch tiers') action is nothing; explicit
+        reserves device memory here and raises when it cannot."""
+
+    def serving_step(self, sim: UMSimulator, names: list[str]) -> None:
+        """Called immediately before each decode step with the KV blocks the
+        step will read — the serving-aware counterpart of ``before_step``:
+        the pipelined tiers prefetch next-step KV evicted to the host back
+        onto the device here, bounded by free capacity."""
+
     @staticmethod
     def _issue_advises(sim: UMSimulator, hints) -> None:
         for h in hints:
@@ -184,6 +208,15 @@ class ExplicitStrategy(VariantStrategy):
     def read_result(self, sim: UMSimulator, name: str) -> None:
         sim.explicit_copy_to_host(name)
 
+    def serving_stage(self, sim: UMSimulator, name: str) -> None:
+        sim.explicit_copy_to_device(name)
+
+    def serving_admit(self, sim: UMSimulator, name: str) -> None:
+        # cudaMalloc: the block must fit whole, up front — under KV
+        # oversubscription this raises, and the cell reads N/A (the paper:
+        # 'the case does not exist with explicit allocation')
+        sim.explicit_alloc(name)
+
 
 class UMAdviseStrategy(VariantStrategy):
     """Issues the workload's advise hints; an optional role-based
@@ -206,6 +239,17 @@ class UMAdviseStrategy(VariantStrategy):
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         self._issue_advises(sim, workload.advises_at(wk.POST_INIT))
 
+    def serving_stage(self, sim: UMSimulator, name: str) -> None:
+        # weights are read-only for the whole trace: the serving analogue of
+        # the workloads' READ_MOSTLY hints
+        sim.advise_read_mostly(name)
+
+    def serving_admit(self, sim: UMSimulator, name: str) -> None:
+        # the static "keep KV close" advise — pins each block to the device,
+        # which backfires under KV oversubscription exactly like the paper's
+        # P9 pathology (and is what um_adaptive_advise sheds at runtime)
+        sim.advise_preferred_location(name, MemorySpace.DEVICE)
+
 
 class UMPrefetchStrategy(VariantStrategy):
     name = "um_prefetch"
@@ -213,6 +257,9 @@ class UMPrefetchStrategy(VariantStrategy):
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         for nm in workload.prefetch:
             sim.prefetch(nm)
+
+    def serving_stage(self, sim: UMSimulator, name: str) -> None:
+        sim.prefetch(name)
 
 
 class UMBothStrategy(UMAdviseStrategy):
@@ -222,6 +269,10 @@ class UMBothStrategy(UMAdviseStrategy):
         super().stage(sim, workload)
         for nm in workload.prefetch:
             sim.prefetch(nm)
+
+    def serving_stage(self, sim: UMSimulator, name: str) -> None:
+        super().serving_stage(sim, name)
+        sim.prefetch(name)
 
 
 class PipelinedScheduleMixin:
@@ -255,6 +306,24 @@ class PipelinedScheduleMixin:
                     idx: int, step: wk.ComputeStep) -> None:
         self.plan(workload, sim).issue(sim, idx)
 
+    def serving_step(self, sim: UMSimulator, names: list[str]) -> None:
+        """The serving-aware prefetch window (DESIGN.md §13): pull the next
+        decode step's KV blocks that were evicted to the host back onto the
+        device over the async copy stream, bounded by *free* capacity — a
+        window that would have to evict would evict KV the same step is
+        about to read.  Blocks with virgin chunks are skipped (only the
+        newest gen block): there is nothing host-side to copy yet."""
+        free = sim.device_capacity - sim.device_used
+        for nm in names:
+            r = sim.regions[nm]
+            nonres = ~r.resident_mask()
+            if (nonres & ~r.populated).any():
+                continue
+            miss = int(r.sizes[nonres].sum())
+            if 0 < miss <= free:
+                sim.prefetch(nm)
+                free -= miss
+
 
 class UMPrefetchPipelinedStrategy(PipelinedScheduleMixin, VariantStrategy):
     """Capacity-aware pipelined prefetch (DESIGN.md §11): instead of one
@@ -273,6 +342,9 @@ class UMPrefetchPipelinedStrategy(PipelinedScheduleMixin, VariantStrategy):
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         self.issue_staging(sim, workload)
 
+    def serving_stage(self, sim: UMSimulator, name: str) -> None:
+        sim.prefetch(name)
+
 
 class UMBothPipelinedStrategy(PipelinedScheduleMixin, UMAdviseStrategy):
     """Advises plus the capacity-aware pipelined prefetch schedule — the
@@ -290,6 +362,10 @@ class UMBothPipelinedStrategy(PipelinedScheduleMixin, UMAdviseStrategy):
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         UMAdviseStrategy.stage(self, sim, workload)
         self.issue_staging(sim, workload)
+
+    def serving_stage(self, sim: UMSimulator, name: str) -> None:
+        UMAdviseStrategy.serving_stage(self, sim, name)
+        sim.prefetch(name)
 
 
 class SVMRemoteStrategy(VariantStrategy):
@@ -372,6 +448,15 @@ class UMAdaptiveAdviseStrategy(UMAdviseStrategy):
 
     def before_step(self, sim: UMSimulator, workload: wk.Workload,
                     idx: int, step: wk.ComputeStep) -> None:
+        self._shed_hostile_advises(sim)
+
+    def serving_step(self, sim: UMSimulator, names: list[str]) -> None:
+        # same trigger, same withdrawal, per decode step: under serving
+        # thrash the "keep KV close" pins (serving_admit) are the pathology
+        self._shed_hostile_advises(sim)
+
+    @staticmethod
+    def _shed_hostile_advises(sim: UMSimulator) -> None:
         if not sim.report.thrash.thrashing():
             return
         for name, r in sim.regions.items():
@@ -399,6 +484,11 @@ class UMPrefetchAdaptiveStrategy(UMPrefetchPipelinedStrategy):
         if sim.report.thrash.thrashing():
             return
         super().before_step(sim, workload, idx, step)
+
+    def serving_step(self, sim: UMSimulator, names: list[str]) -> None:
+        if sim.report.thrash.thrashing():
+            return
+        super().serving_step(sim, names)
 
 
 # -- registry ------------------------------------------------------------------

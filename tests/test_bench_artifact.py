@@ -125,6 +125,74 @@ def test_committed_bench_new_tiers_present_and_seed_cells_untouched():
 
 
 # ---------------------------------------------------------------------------
+# error cells are labelled, never diffed (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+def test_cell_deltas_labels_error_cells():
+    """A cell carrying ``error`` is a failure record, not a perf result:
+    it lands under ``errored``/``cells_error``, never in ``changed`` (its
+    None total vs the prior number is not a perf delta) and never skews
+    ``cells_new``."""
+    prev = [_row(variant="um", total_s=2.0),
+            _row(variant="um_advise", total_s=3.0)]
+    cur = [_row(variant="um", total_s=2.0),
+           _row(variant="um_advise", total_s=None,
+                error="RuntimeError: kaboom")]
+    d = cell_deltas(prev, cur)
+    assert d["cells_error"] == 1
+    assert d["errored"] == [{
+        "cell": ["bs", "p", "um_advise", "in_memory", "group"],
+        "error": "RuntimeError: kaboom"}]
+    assert d["cells_changed"] == 0 and d["changed"] == []
+    assert d["cells_compared"] == 1
+    assert d["cells_new"] == 0
+    assert json.loads(json.dumps(d)) == d
+
+
+def test_cell_deltas_prior_error_cells_not_removed():
+    """A prior-artifact failure record that stopped recurring is not lost
+    coverage — and a cell errored on both sides is neither changed nor
+    removed; when it recovers with a different total it diffs against
+    nothing (prior error carried no comparable total)."""
+    prev = [_row(variant="um", total_s=None, error="timeout after 5s"),
+            _row(variant="um_advise", total_s=3.0)]
+    cur = [_row(variant="um", total_s=9.9),      # recovered
+           _row(variant="um_advise", total_s=3.0)]
+    d = cell_deltas(prev, cur)
+    assert d["cells_removed"] == 0
+    assert d["cells_changed"] == 0
+    assert d["cells_error"] == 0
+    assert d["cells_compared"] == 1              # only the clean-both cell
+    assert d["cells_new"] == 1                   # the recovered cell
+    # the errored prior cell's axis values are not "new" — it was swept
+    assert d["new_axis_values"] == {}
+
+
+def test_committed_bench_serving_block_and_no_errors():
+    """The committed artifact carries the serving sweep (serve_* apps over
+    the kv_* regimes) and a clean run: no cell errored, and the vs_prev
+    diff (when present) labels zero error cells."""
+    with open("BENCH_umbench.json") as f:
+        bench = json.load(f)
+    serve_rows = [r for r in bench["cells"]
+                  if str(r.get("app", "")).startswith("serve_")]
+    assert serve_rows
+    assert {r["regime"] for r in serve_rows} == {"kv_100", "kv_150",
+                                                 "kv_200"}
+    assert len({r["variant"] for r in serve_rows}) >= 8
+    assert len({r["app"] for r in serve_rows}) >= 2
+    assert all("error" not in r for r in bench["cells"])
+    for r in serve_rows:
+        if r["total_s"] is not None:
+            for col in ("goodput_rps", "ttft_p50_s", "ttft_p99_s",
+                        "e2e_p50_s", "e2e_p99_s"):
+                assert col in r, (col, r)
+    vs = bench.get("vs_prev")
+    if vs is not None and "cells_error" in vs:
+        assert vs["cells_error"] == 0 and vs["errored"] == []
+
+
+# ---------------------------------------------------------------------------
 # sweep_workers must record the pool the sweeps actually used
 # ---------------------------------------------------------------------------
 

@@ -1,21 +1,23 @@
-"""Docs-consistency gate (ISSUE 4): the variant tables in README.md and
-DESIGN.md §8 must list exactly the registered strategies, so the docs
-cannot silently rot as the registry grows.  CI runs this file as a named
-step; it is also part of tier-1.
+"""Docs-consistency gates (ISSUE 4, extended by ISSUE 7): the variant
+tables in README.md and DESIGN.md §8 must list exactly the registered
+strategies, and README.md's traffic-pattern table exactly the registered
+serving patterns, so the docs cannot silently rot as either registry
+grows.  CI runs this file as a named step; it is also part of tier-1.
 """
 import re
 from pathlib import Path
 
 import pytest
 
+from repro.umbench.serving import pattern_names
 from repro.umbench.variants import strategy_names
 
 REPO = Path(__file__).resolve().parent.parent
 
 
-def variant_table_names(path: Path) -> set[str]:
+def doc_table_names(path: Path, header: str) -> set[str]:
     """Backticked first-column entries of every markdown table whose header
-    row starts with a ``variant`` column."""
+    row starts with a ``header``-named column."""
     names: set[str] = set()
     in_table = False
     for line in path.read_text().splitlines():
@@ -24,7 +26,7 @@ def variant_table_names(path: Path) -> set[str]:
             in_table = False
             continue
         first = row.strip("|").split("|")[0].strip()
-        if first == "variant":
+        if first == header:
             in_table = True
             continue
         if not in_table or set(first) <= {"-", ":", " "}:   # separator row
@@ -35,6 +37,10 @@ def variant_table_names(path: Path) -> set[str]:
     return names
 
 
+def variant_table_names(path: Path) -> set[str]:
+    return doc_table_names(path, "variant")
+
+
 @pytest.mark.parametrize("doc", ["README.md", "DESIGN.md"])
 def test_variant_table_matches_registry(doc):
     documented = variant_table_names(REPO / doc)
@@ -42,6 +48,18 @@ def test_variant_table_matches_registry(doc):
     registered = set(strategy_names())
     assert documented == registered, (
         f"{doc} variant table diverges from strategy_names(): "
+        f"undocumented={sorted(registered - documented)}, "
+        f"stale={sorted(documented - registered)}")
+
+
+def test_traffic_pattern_table_matches_registry():
+    """README's serving-tier pattern table lists exactly the registered
+    traffic patterns (the ISSUE 7 analogue of the variant-table gate)."""
+    documented = doc_table_names(REPO / "README.md", "pattern")
+    assert documented, "README.md: no traffic-pattern table found"
+    registered = set(pattern_names())
+    assert documented == registered, (
+        f"README.md pattern table diverges from pattern_names(): "
         f"undocumented={sorted(registered - documented)}, "
         f"stale={sorted(documented - registered)}")
 

@@ -1,0 +1,55 @@
+"""Subprocess smoke tests for the examples/ scripts (ISSUE 7 satellite):
+each runs end-to-end with PYTHONPATH=src exactly as its docstring says,
+exits 0, and prints the output its walkthrough promises.  The scripts that
+compile JAX/Pallas kernels are ``slow``; the pure-simulator tours run in
+tier-1.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_example(name: str, timeout: float = 300.0):
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join("examples", name)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (name, proc.stdout[-2000:],
+                                  proc.stderr[-2000:])
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_quickstart_smoke():
+    out = run_example("quickstart.py")
+    assert "Memory advises on a simulated UM platform" in out
+    assert "Residency planning" in out
+    assert "Pallas TPU kernel" in out
+    assert "advised" in out and "baseline" in out
+
+
+def test_um_advise_tour_smoke():
+    out = run_example("um_advise_tour.py")
+    assert "oversubscribed" in out
+    assert "x vs basic UM" in out
+    assert "remote-tier family on grace-hopper-c2c" in out
+    assert "* = fastest" in out
+
+
+@pytest.mark.slow
+def test_oversubscribe_demo_smoke():
+    out = run_example("oversubscribe_demo.py")
+    assert "Planner escalation" in out
+    assert "paged attention over" in out and "finite=True" in out
+    assert "UM+Advise" in out
+
+
+def test_kv_serving_demo_smoke():
+    out = run_example("kv_serving_demo.py")
+    assert "kv_100" in out and "kv_200" in out
+    assert "um_pinned_zero_copy" in out
+    assert "ttft_p99" in out and "goodput" in out

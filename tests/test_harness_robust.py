@@ -75,6 +75,59 @@ def test_cell_timeout_records_and_disarms():
     assert ok.report is not None and ok.error is None
 
 
+def test_cell_deadline_restores_ambient_itimer_and_handler():
+    """A caller's already-armed ITIMER_REAL must survive a cell deadline:
+    the old handler comes back AND the old timer is re-armed with its
+    remaining time (the pre-fix code silently cancelled it)."""
+    from repro.umbench.harness import _cell_deadline
+    fired = []
+    prev_handler = signal.signal(signal.SIGALRM,
+                                 lambda sig, frm: fired.append(sig))
+    try:
+        signal.setitimer(signal.ITIMER_REAL, 0.6)
+        with _cell_deadline(30.0):
+            time.sleep(0.05)
+        assert signal.getsignal(signal.SIGALRM) is not prev_handler
+        delay, interval = signal.getitimer(signal.ITIMER_REAL)
+        assert 0.0 < delay <= 0.6, delay    # remaining time, not cancelled
+        assert interval == 0.0
+        deadline = time.monotonic() + 5.0
+        while not fired and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert fired == [signal.SIGALRM]    # the ambient timer still fires
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, prev_handler)
+
+
+def test_cell_deadline_nested_outer_still_fires():
+    """A nested (inner) deadline that expires must hand the outer deadline
+    back its remaining time — the outer timeout still fires."""
+    from repro.umbench.harness import CellTimeout, _cell_deadline
+    t0 = time.monotonic()
+    with pytest.raises(CellTimeout):
+        with _cell_deadline(0.4):
+            try:
+                with _cell_deadline(0.05):
+                    while True:
+                        time.sleep(0.01)
+            except CellTimeout:
+                pass                        # inner expired; outer re-armed
+            while True:
+                time.sleep(0.01)            # outer must cut this off
+    assert time.monotonic() - t0 < 5.0
+    # and nothing leaks: no timer is armed afterwards
+    assert signal.getitimer(signal.ITIMER_REAL) == (0.0, 0.0)
+
+
+def test_cell_deadline_none_leaves_signals_alone():
+    from repro.umbench.harness import _cell_deadline
+    before = signal.getsignal(signal.SIGALRM)
+    with _cell_deadline(None):
+        assert signal.getsignal(signal.SIGALRM) is before
+    assert signal.getsignal(signal.SIGALRM) is before
+
+
 # ---------------------------------------------------------------------------
 # worker crashes are isolated and retried
 # ---------------------------------------------------------------------------

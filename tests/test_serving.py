@@ -1,0 +1,392 @@
+"""Serving tier (DESIGN.md §13): salted deterministic traffic, the
+continuous-batching scheduler's KV-region lifecycle over ``sim.free``,
+per-request latency metrics, journal round-trip of serving cells, and the
+SIGTERM-mid-sweep resume path with the serving runner plugged in.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.core.simulator import GB, UMSimulator
+from repro.umbench.journal import SweepJournal, cell_key
+from repro.umbench.platforms import PLATFORMS
+from repro.umbench.serving import (
+    PATTERNS,
+    SERVING_REGIMES,
+    ServingConfig,
+    ServingReport,
+    get_pattern,
+    pattern_names,
+    percentile,
+    run_serving_cell,
+    run_serving_specs,
+    serve,
+    serving_specs,
+)
+from repro.umbench.variants import get_strategy, strategy_names
+
+SMOKE = dict(pattern="poisson_short", platform="p9-volta-nvlink",
+             regime="kv_150")
+
+
+def smoke_cell(variant="um", **over):
+    kw = dict(SMOKE, **over)
+    return run_serving_cell(kw["pattern"], variant, kw["platform"],
+                            kw["regime"], faults=kw.get("faults"))
+
+
+# ---------------------------------------------------------------------------
+# traffic generation
+# ---------------------------------------------------------------------------
+
+def test_traffic_deterministic_and_salt_separated():
+    pat = get_pattern("poisson")
+    a = pat.generate(salt="cell-A")
+    b = pat.generate(salt="cell-A")
+    c = pat.generate(salt="cell-B")
+    assert a == b                       # same seed+salt: bit-identical
+    assert a != c                       # the salt really separates streams
+    assert len(a) == pat.n_requests
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr) and arr[0] >= 0.0
+    for r in a:
+        assert pat.prompt_clamp[0] <= r.prompt_len <= pat.prompt_clamp[1]
+        assert pat.gen_clamp[0] <= r.gen_len <= pat.gen_clamp[1]
+        assert r.total_tokens == r.prompt_len + r.gen_len
+
+
+def test_pattern_kinds_shape_arrivals():
+    """Bursty gaps are burstier than Poisson's (higher squared coefficient
+    of variation), and the diurnal modulation concentrates arrivals in the
+    peak (sin > 0) half of each period while flat Poisson does not."""
+    def gaps(name):
+        out = []
+        for i in range(20):         # pool salts: one 48-request trace is
+            reqs = get_pattern(name).generate(salt=f"shape{i}")   # too noisy
+            arr = [r.arrival_s for r in reqs]
+            out += [b - a for a, b in zip(arr, arr[1:])]
+        return out
+
+    def cv2(xs):
+        m = sum(xs) / len(xs)
+        return sum((x - m) ** 2 for x in xs) / len(xs) / (m * m)
+
+    assert cv2(gaps("bursty")) > 1.5 * cv2(gaps("poisson"))
+
+    def peak_frac(name):
+        period = get_pattern(name).period_s
+        phases = [(r.arrival_s % period) / period
+                  for i in range(20)
+                  for r in get_pattern(name).generate(salt=f"shape{i}")]
+        return sum(1 for p in phases if p < 0.5) / len(phases)
+
+    assert peak_frac("diurnal") > 0.9       # load lives at the peak
+    assert 0.35 < peak_frac("poisson") < 0.75   # flat: roughly even halves
+
+
+def test_pattern_registry_resolution():
+    assert set(pattern_names()) == set(PATTERNS)
+    assert {"poisson", "bursty", "diurnal", "poisson_short"} <= set(PATTERNS)
+    p = get_pattern("poisson")
+    assert get_pattern(p) is p                       # object passthrough
+    assert get_pattern("serve_poisson") is p         # app-label prefix
+    with pytest.raises(KeyError):
+        get_pattern("no_such_pattern")
+
+
+# ---------------------------------------------------------------------------
+# sim.free — the KV lifecycle primitive
+# ---------------------------------------------------------------------------
+
+def test_free_releases_device_residency():
+    sim = UMSimulator(PLATFORMS["p9-volta-nvlink"])
+    sim.alloc("kv", int(2 * GB), role="kv")
+    sim.kernel("touch", flops=1e9, reads=["kv"], writes=[])
+    assert sim.device_used > 0
+    sim.free("kv")
+    assert sim.device_used == 0
+    assert "kv" not in sim.regions
+    with pytest.raises(KeyError):
+        sim.free("kv")
+
+
+def test_free_then_realloc_same_name_is_fresh():
+    sim = UMSimulator(PLATFORMS["p9-volta-nvlink"])
+    sim.alloc("kv", int(1 * GB), role="kv")
+    sim.kernel("t0", flops=1e9, reads=["kv"], writes=[])
+    sim.free("kv")
+    sim.alloc("kv", int(1 * GB), role="kv")
+    r = sim.regions["kv"]
+    assert not r.populated.any() and not r.resident_mask().any()
+    # the fresh region faults in from scratch, alongside survivors
+    sim.alloc("other", int(1 * GB), role="data")
+    sim.kernel("t1", flops=1e9, reads=["kv", "other"], writes=[])
+    rep = sim.finish()
+    assert rep.total_s > 0 and sim.device_used > 0
+
+
+def test_free_keeps_other_regions_consistent():
+    """Freeing one region must not disturb another's residency accounting
+    (the residency-index run entries encode region slots — the dead slot
+    stays reserved)."""
+    sim = UMSimulator(PLATFORMS["intel-volta-pcie"])
+    sim.alloc("a", int(2 * GB), role="kv")
+    sim.alloc("b", int(2 * GB), role="kv")
+    sim.kernel("t", flops=1e9, reads=["a", "b"], writes=[])
+    used_both = sim.device_used
+    b_bytes = int(sim.regions["b"].sizes[
+        sim.regions["b"].resident_mask()].sum())
+    sim.free("a")
+    assert sim.device_used == b_bytes
+    assert used_both > b_bytes
+    sim.kernel("t2", flops=1e9, reads=["b"], writes=[])
+    assert sim.finish().total_s > 0
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_serves_every_request_with_ordered_timelines():
+    pat = get_pattern("poisson_short")
+    reqs = pat.generate(salt="sched")
+    sim = UMSimulator(PLATFORMS["p9-volta-nvlink"])
+    sched = serve(sim, get_strategy("um"), reqs, kv_frac=1.5)
+    assert len(sched.served) == len(reqs)
+    assert sched.n_prefills == len(reqs)
+    by_rid = {r.rid: r for r in sched.served}
+    for req in reqs:
+        s = by_rid[req.rid]
+        assert req.arrival_s <= s.admit_s <= s.prefill_done_s <= s.finish_s
+        assert (s.prompt_len, s.gen_len) == (req.prompt_len, req.gen_len)
+    # every KV region was freed on retirement; only the weights shard lives
+    assert set(sim.regions) == {"weights"}
+    assert sched.n_decode_steps >= max(r.gen_len for r in reqs)
+
+
+def test_admission_respects_token_budget():
+    """With a budget below two concurrent requests, the batch never holds
+    more than one — FCFS admission blocks on the budget."""
+    pat = get_pattern("poisson_short")
+    reqs = pat.generate(salt="budget")
+    cfg = ServingConfig(max_live_batches=1)
+    sim = UMSimulator(PLATFORMS["p9-volta-nvlink"])
+    sched = serve(sim, get_strategy("um"), reqs, kv_frac=1.5, config=cfg)
+    assert len(sched.served) == len(reqs)
+    # serialized: each request's decode finishes before the next admit
+    order = sorted(sched.served, key=lambda r: r.admit_s)
+    for prev, nxt in zip(order, order[1:]):
+        assert nxt.admit_s >= prev.finish_s
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == 2.5
+    assert percentile([7.0], 99) == 7.0
+    assert percentile([], 50) == 0.0
+
+
+def test_serving_report_json_roundtrip():
+    cell = smoke_cell("um")
+    rep = cell.report
+    assert rep is not None
+    back = ServingReport.from_json_dict(
+        json.loads(json.dumps(rep.to_json_dict())))
+    assert back == rep                  # full-precision dataclass equality
+
+
+# ---------------------------------------------------------------------------
+# serving cells
+# ---------------------------------------------------------------------------
+
+def test_serving_cell_bit_for_bit_deterministic():
+    a = smoke_cell("um")
+    b = smoke_cell("um")
+    assert a.report == b.report
+    assert a.row() == b.row()
+
+
+def test_ci_smoke_deterministic_p99_across_tiers():
+    """The CI serving smoke: the short Poisson trace on um and the
+    pipelined prefetch tier, each run twice — identical p99 both times."""
+    for variant in ("um", "um_prefetch_pipelined"):
+        a, b = smoke_cell(variant), smoke_cell(variant)
+        assert a.report.ttft_p99_s == b.report.ttft_p99_s
+        assert a.report.e2e_p99_s == b.report.e2e_p99_s
+        assert a.report == b.report
+        assert a.report.completed == a.report.n_requests
+
+
+def test_kv_regimes_bind_oversubscription():
+    """kv_100 fits (no evictions); kv_150 oversubscribes the full trace —
+    eviction churn appears and goodput drops."""
+    at = run_serving_cell("poisson", "um", "p9-volta-nvlink", "kv_100")
+    over = run_serving_cell("poisson", "um", "p9-volta-nvlink", "kv_150")
+    assert at.report.sim.n_evictions == 0
+    assert over.report.sim.n_evictions > 0
+    assert over.report.goodput_rps < at.report.goodput_rps
+    assert over.report.e2e_p99_s > at.report.e2e_p99_s
+
+
+def test_explicit_na_under_kv_oversubscription():
+    cell = run_serving_cell("poisson", "explicit", "p9-volta-nvlink",
+                            "kv_200")
+    assert cell.report is None and cell.error is None   # N/A, not a failure
+    assert cell.row()["total_s"] is None
+
+
+def test_platform_gate_na():
+    for variant in ("svm_remote", "um_hybrid_counters"):
+        cell = run_serving_cell("poisson_short", variant, "intel-volta-pcie",
+                                "kv_100")
+        assert cell.report is None and cell.error is None
+
+
+def test_serving_cell_timeout_is_failure_record():
+    cell = run_serving_cell("poisson", "um", "p9-volta-nvlink", "kv_200",
+                            timeout_s=0.005)
+    assert cell.report is None
+    assert cell.error == "timeout after 0.005s"
+    assert cell.row()["error"] == cell.error
+
+
+def test_fault_scenario_composes_and_keys():
+    """degraded_link under a thrashing serving cell (the poisson trace at
+    kv_150 churns eviction/refault transfers, so the degraded-bandwidth
+    windows actually open) slows the cell, keys separately in the journal,
+    and stays deterministic."""
+    kw = dict(pattern="poisson")
+    clean = smoke_cell("um", **kw)
+    degraded = smoke_cell("um", faults="degraded_link", **kw)
+    assert degraded.faults == "degraded_link"
+    assert cell_key(clean) != cell_key(degraded)
+    assert degraded.report.sim.n_degraded_xfers > 0
+    assert degraded.report.total_s > clean.report.total_s
+    assert degraded.row()["fault_scenario"] == "degraded_link"
+    again = smoke_cell("um", faults="degraded_link", **kw)
+    assert again.report == degraded.report      # injection is salted too
+
+
+# ---------------------------------------------------------------------------
+# specs + journal
+# ---------------------------------------------------------------------------
+
+def test_serving_specs_cover_registry():
+    specs = serving_specs(("poisson", "bursty"), ("p9-volta-nvlink",),
+                          tuple(SERVING_REGIMES))
+    assert len(specs) == 2 * 3 * len(strategy_names())
+    apps = {s[0] for s in specs}
+    assert apps == {"serve_poisson", "serve_bursty"}
+    assert {s[3] for s in specs} == set(SERVING_REGIMES)
+
+
+def test_serving_journal_roundtrip_bit_identical(tmp_path):
+    path = str(tmp_path / "serving.jsonl")
+    cells = [smoke_cell(v) for v in ("um", "explicit", "um_prefetch")]
+    with SweepJournal(path) as j:
+        for c in cells:
+            j.record(c)
+    j2 = SweepJournal(path)
+    for c in cells:
+        back = j2.completed[cell_key(c)]
+        assert type(back).__name__ == "ServingCellResult"
+        assert back.report == c.report
+        assert back.row() == c.row()
+
+
+def test_serving_and_matrix_cells_share_a_journal(tmp_path):
+    """The ``kind`` tag keeps the two cell families apart in one file: a
+    mixed journal reconstructs each with its own report class."""
+    from repro.umbench.harness import run_cell
+    path = str(tmp_path / "mixed.jsonl")
+    mat = run_cell("bs", "um", "intel-pascal-pcie", "in_memory")
+    srv = smoke_cell("um")
+    with SweepJournal(path) as j:
+        j.record(mat)
+        j.record(srv)
+    j2 = SweepJournal(path)
+    assert type(j2.completed[cell_key(mat)]).__name__ == "CellResult"
+    assert type(j2.completed[cell_key(srv)]).__name__ == "ServingCellResult"
+    assert j2.completed[cell_key(srv)].report == srv.report
+
+
+def test_run_serving_specs_resumes_from_journal(tmp_path):
+    path = str(tmp_path / "serving.jsonl")
+    specs = serving_specs(("poisson_short",), ("p9-volta-nvlink",),
+                          ("kv_100", "kv_150"),
+                          variants=("um", "um_prefetch", "explicit"))
+    subset = specs[:2]
+    with SweepJournal(path) as j:
+        run_serving_specs(subset, journal=j)
+        assert (j.reused, j.ran) == (0, 2)
+    with SweepJournal(path) as j2:
+        res = run_serving_specs(specs, journal=j2)
+        assert (j2.reused, j2.ran) == (2, len(specs) - 2)
+    fresh = run_serving_specs(specs)
+    assert [c.row() for c in res] == [c.row() for c in fresh]
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM mid-serving-sweep, then resume
+# ---------------------------------------------------------------------------
+
+_SERVING_SWEEP_SCRIPT = textwrap.dedent("""
+    import sys
+    from repro.umbench.journal import SweepJournal
+    from repro.umbench.serving import run_serving_specs, serving_specs
+    specs = serving_specs(("poisson", "diurnal"), ("p9-volta-nvlink",),
+                          ("kv_150", "kv_200"),
+                          variants=("um", "um_advise", "um_prefetch",
+                                    "um_both"))
+    with SweepJournal(sys.argv[1], resume=True) as j:
+        run_serving_specs(specs, journal=j)
+    print("COMPLETE", j.reused, j.ran)
+""")
+
+
+def test_sigterm_interrupt_then_resume_serving(tmp_path):
+    """SIGTERM a serving sweep mid-flight; the resumed sweep replays the
+    journaled serving cells (reconstructed as ServingCellResults) and runs
+    only the rest."""
+    path = str(tmp_path / "serving.jsonl")
+    env = dict(os.environ, PYTHONPATH="src")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _SERVING_SWEEP_SCRIPT, path],
+        env=env, cwd=repo)
+    deadline = time.monotonic() + 120
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            pytest.fail("serving sweep finished before it could be "
+                        "interrupted")
+        if os.path.exists(path) and sum(1 for _ in open(path)) >= 2:
+            break
+        time.sleep(0.05)
+    proc.send_signal(signal.SIGTERM)
+    proc.wait(timeout=60)
+    assert proc.returncode != 0
+    done_before = [tuple(json.loads(l)["key"]) for l in open(path)
+                   if l.endswith("\n")]
+    assert done_before
+    specs = serving_specs(("poisson", "diurnal"), ("p9-volta-nvlink",),
+                          ("kv_150", "kv_200"),
+                          variants=("um", "um_advise", "um_prefetch",
+                                    "um_both"))
+    with SweepJournal(path, resume=True) as j:
+        res = run_serving_specs(specs, journal=j)
+        assert j.reused == len(done_before)     # journaled cells NOT re-run
+        assert j.ran == len(specs) - len(done_before)
+    assert len(res) == len(specs)
+    assert all(c.report is not None and c.error is None for c in res)
