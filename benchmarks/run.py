@@ -119,7 +119,9 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
         key = _cell_key(row)
         if isinstance(row, dict) and row.get("error") is not None:
             errored.append({"cell": None if key is None else list(key),
-                            "error": row["error"]})
+                            "error": row["error"],
+                            **({} if row.get("error_kind") is None
+                               else {"error_kind": row["error_kind"]})})
             continue
         if key is None or key not in prev:
             continue

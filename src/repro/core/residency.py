@@ -158,29 +158,76 @@ class RunQueue:
     def compact(self, regions, alive: np.ndarray | None = None) -> None:
         """Drop dead entries, renumbering the survivors and re-pointing the
         affected regions' ``entry_ptr`` — order (and thus pop order) is
-        preserved.  O(live chunks of surviving entries), amortized by the
-        doubling growth policy."""
+        preserved.  Adjacent mergeable survivors (same region, same chunk
+        size, fully live, contiguous) coalesce into one run: removing the
+        dead entries between them is exactly what makes them adjacent, and
+        the merged entry pops the same chunk sequence the pair did.
+        O(live chunks of surviving entries), amortized by the doubling
+        growth policy."""
         if alive is None:
             alive = self._entries_alive()
-        for name in ("reg", "start", "length", "nlive", "csize"):
-            arr = getattr(self, name)
-            arr[:len(alive)] = arr[alive]
-        for new_e, old_e in enumerate(alive.tolist()):
-            if new_e == old_e:
+        w = 0
+        for old_e in alive.tolist():
+            rg = int(self.reg[old_e])
+            s = int(self.start[old_e])
+            ln = int(self.length[old_e])
+            nl = int(self.nlive[old_e])
+            cz = int(self.csize[old_e])
+            if (w > 0 and nl == ln
+                    and int(self.nlive[w - 1]) == int(self.length[w - 1])
+                    and int(self.reg[w - 1]) == rg
+                    and int(self.csize[w - 1]) == cz
+                    and int(self.start[w - 1]) + int(self.length[w - 1]) == s):
+                win = regions[rg].entry_ptr[s:s + ln]
+                win[win == old_e * 2 + self.qi] = (w - 1) * 2 + self.qi
+                self.length[w - 1] += ln
+                self.nlive[w - 1] += ln
                 continue
-            r = regions[int(self.reg[new_e])]
-            s = int(self.start[new_e])
-            ln = int(self.length[new_e])
-            win = r.entry_ptr[s:s + ln]
-            win[win == old_e * 2 + self.qi] = new_e * 2 + self.qi
+            if w != old_e:
+                self.reg[w] = rg
+                self.start[w] = s
+                self.length[w] = ln
+                self.nlive[w] = nl
+                self.csize[w] = cz
+                win = regions[rg].entry_ptr[s:s + ln]
+                win[win == old_e * 2 + self.qi] = w * 2 + self.qi
+            w += 1
         self.head = 0
-        self.tail = len(alive)
+        self.tail = w
 
     # -- membership ------------------------------------------------------------
     def append(self, reg: int, starts, lengths, csizes, regions) -> None:
         """File runs at the tail (stamp order == append order).  ``starts``/
-        ``lengths``/``csizes`` are parallel per-run arrays for ONE region."""
+        ``lengths``/``csizes`` are parallel per-run arrays for ONE region.
+
+        Run coalescing (DESIGN.md §14): when the first incoming run extends
+        the tail entry — same region, same chunk size, fully live, and
+        chunk-contiguous — it merges into it instead of opening a new entry.
+        The merged chunks carry the newest stamps and the tail entry pops
+        last, so the pop order is bit-identical; what changes is that
+        streaming producers (consecutive fault batches walking one region)
+        stay O(1) entries instead of one entry per batch."""
         n = len(starts)
+        if not n:
+            return
+        t = self.tail
+        if t > self.head:
+            e = t - 1
+            if (int(self.reg[e]) == reg
+                    and int(self.csize[e]) == int(csizes[0])
+                    and int(self.nlive[e]) == int(self.length[e])
+                    and int(self.start[e]) + int(self.length[e])
+                    == int(starts[0])):
+                s0, ln0 = int(starts[0]), int(lengths[0])
+                self.length[e] += ln0
+                self.nlive[e] += ln0
+                regions[reg].entry_ptr[s0:s0 + ln0] = e * 2 + self.qi
+                self.live_chunks += ln0
+                self.live_bytes += ln0 * int(csizes[0])
+                starts, lengths, csizes = starts[1:], lengths[1:], csizes[1:]
+                n -= 1
+                if not n:
+                    return
         self._ensure(n, regions)
         t = self.tail
         self.reg[t:t + n] = reg

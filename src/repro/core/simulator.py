@@ -311,7 +311,8 @@ class UMSimulator:
     (role-based ``AdvisePolicy`` included); the simulator only executes them.
     """
 
-    def __init__(self, platform: SimPlatform, granularity: str = "group"):
+    def __init__(self, platform: SimPlatform, granularity: str = "group",
+                 audit: bool = False):
         if granularity not in GRANULARITIES:
             raise ValueError(f"granularity must be one of {GRANULARITIES}")
         self.p = platform
@@ -333,6 +334,20 @@ class UMSimulator:
         # entirely absent — every injection site guards on this, so the
         # disabled engine is bit-identical to the pre-injection code path
         self._inj = None
+        # engine invariant audit (DESIGN.md §14): opt-in, read-only checks
+        # of the residency index after every public op.  None (the default)
+        # costs one attribute test per op, and the checks only *read* state,
+        # so audit=True is bit-identical to audit=False by construction
+        # (tests/test_analysis_audit.py pins it numerically).
+        self._audit = None
+        if audit:
+            from repro.umbench.analysis.audit import check_invariants
+            self._audit = check_invariants
+
+    def _audited(self, op: str, region: str | None = None) -> None:
+        """One guarded audit call site per public batched op."""
+        if self._audit is not None:
+            self._audit(self, op, region)
 
     def set_fault_injector(self, injector) -> None:
         """Attach a :class:`repro.core.faults.FaultInjector` for this run.
@@ -353,6 +368,7 @@ class UMSimulator:
         r.slot = len(self._rlist)
         self._rlist.append(r)
         self.regions[name] = r
+        self._audited("alloc", name)
         return r
 
     def free(self, name: str) -> None:
@@ -373,9 +389,11 @@ class UMSimulator:
             r.duplicated[ids] = False
             self._pf_clear(r, ids)
         r.populated[:] = False
+        self._audited("free", name)
 
     def advise_read_mostly(self, name: str) -> None:
         self.regions[name].read_mostly = True
+        self._audited("advise_read_mostly", name)
 
     def advise_preferred_location(self, name: str, space: MemorySpace) -> None:
         r = self.regions[name]
@@ -386,19 +404,20 @@ class UMSimulator:
         # the paper's P9 in-memory win for CG/FDTD (§IV-A).
         if space is MemorySpace.DEVICE and self.p.host_can_access_device:
             cand = np.nonzero(~r.populated & ~r.resident_mask())[0]
-            if not len(cand):
-                return
-            free = self.device_capacity - self.device_used
-            csum = np.cumsum(r.sizes[cand])
-            # placement preference, not a guarantee: stop at the first
-            # candidate that does not fit
-            k = int(np.searchsorted(csum, free, side="right"))
-            if k:
-                self._insert_resident(r, cand[:k], duplicate=False)
+            if len(cand):
+                free = self.device_capacity - self.device_used
+                csum = np.cumsum(r.sizes[cand])
+                # placement preference, not a guarantee: stop at the first
+                # candidate that does not fit
+                k = int(np.searchsorted(csum, free, side="right"))
+                if k:
+                    self._insert_resident(r, cand[:k], duplicate=False)
+        self._audited("advise_preferred_location", name)
 
     def advise_accessed_by(self, name: str, accessor: Accessor) -> None:
         r = self.regions[name]
         r.accessed_by = r.accessed_by + (accessor,)
+        self._audited("advise_accessed_by", name)
 
     # -- advise withdrawal (the adaptive tiers' degradation ops, §12) ----------
     def unadvise_read_mostly(self, name: str) -> None:
@@ -410,15 +429,15 @@ class UMSimulator:
         r = self.regions[name]
         r.read_mostly = False
         dup_ids = np.nonzero(r.duplicated)[0]
-        if not len(dup_ids):
-            return
-        r.duplicated[dup_ids] = False
-        gone = dup_ids[~r.on_device[dup_ids]]
-        if len(gone):
-            self.device_used -= int(r.sizes[gone].sum())
-            self.report.n_dropped += len(gone)
-            self._index_remove(r, gone)
-            self._pf_clear(r, gone)
+        if len(dup_ids):
+            r.duplicated[dup_ids] = False
+            gone = dup_ids[~r.on_device[dup_ids]]
+            if len(gone):
+                self.device_used -= int(r.sizes[gone].sum())
+                self.report.n_dropped += len(gone)
+                self._index_remove(r, gone)
+                self._pf_clear(r, gone)
+        self._audited("unadvise_read_mostly", name)
 
     def unadvise_preferred_location(self, name: str) -> None:
         """Withdraw PREFERRED_LOCATION: pages are no longer pinned (and no
@@ -431,14 +450,14 @@ class UMSimulator:
         if r.preferred is None:
             return
         r.preferred = None
-        if not r.q_live[1]:
-            return
-        ids = np.nonzero(r.in_pin_queue & (r.entry_ptr >= 0))[0]
-        ids = ids[np.argsort(r.stamp[ids], kind="stable")]
-        self._index_remove(r, ids)
-        r.in_pin_queue[ids] = False
-        r.stamp[ids] = self._stamps(len(ids))
-        self._index_append(r, ids)
+        if r.q_live[1]:
+            ids = np.nonzero(r.in_pin_queue & (r.entry_ptr >= 0))[0]
+            ids = ids[np.argsort(r.stamp[ids], kind="stable")]
+            self._index_remove(r, ids)
+            r.in_pin_queue[ids] = False
+            r.stamp[ids] = self._stamps(len(ids))
+            self._index_append(r, ids)
+        self._audited("unadvise_preferred_location", name)
 
     def enable_access_counters(self, name: str, threshold: float) -> None:
         """Arm Grace-Hopper-style per-chunk access counters (DESIGN.md §10)
@@ -456,6 +475,7 @@ class UMSimulator:
         r.counter_threshold = float(threshold)
         if r.touch_count is None:
             r.touch_count = np.zeros(r.nchunks, dtype=np.int64)
+        self._audited("enable_access_counters", name)
 
     # -- residency bookkeeping -------------------------------------------------
     def _stamps(self, n: int) -> np.ndarray:
@@ -1161,6 +1181,7 @@ class UMSimulator:
             )
         self._copy_walk(r, lambda rr: ~rr.resident_mask(),
                         duplicate=False, asynchronous=False)
+        self._audited("explicit_copy_to_device", name)
 
     def explicit_alloc(self, name: str) -> None:
         """cudaMalloc semantics: device allocation, no transfer.  Fails when
@@ -1174,6 +1195,7 @@ class UMSimulator:
             )
         if len(cand):
             self._insert_resident(r, cand, duplicate=False)
+        self._audited("explicit_alloc", name)
 
     def explicit_copy_to_host(self, name: str) -> None:
         r = self.regions[name]
@@ -1188,6 +1210,7 @@ class UMSimulator:
             self.t_device += t
             self.report.dtoh_s += t
             self.report.dtoh_bytes += int(sz.sum())
+        self._audited("explicit_copy_to_host", name)
 
     def prefetch(self, name: str, dst: MemorySpace = MemorySpace.DEVICE,
                  nbytes: int | None = None) -> None:
@@ -1253,6 +1276,7 @@ class UMSimulator:
                 r.on_device[ids] = False
                 r.duplicated[ids] = False
                 self._pf_clear(r, ids)
+        self._audited("prefetch", name)
 
     def _eager_restore(self) -> None:
         """Coherent-fabric runtime behaviour under memory pressure: pages
@@ -1330,6 +1354,7 @@ class UMSimulator:
                 r.on_device[dev_ids] = False
                 self._pf_clear(r, dev_ids)
         r.populated[ids] = True
+        self._audited("host_write", name)
 
     def host_read(self, name: str, nbytes: int | None = None) -> None:
         """Host reads results. Device-resident pages migrate back unless the
@@ -1340,6 +1365,7 @@ class UMSimulator:
         ids = np.arange(min(nch, r.nchunks))
         sel = ids[r.on_device[ids] & ~r.duplicated[ids]]
         if not len(sel):
+            self._audited("host_read", name)
             return
         sz = r.sizes[sel]
         total = int(sz.sum())
@@ -1366,6 +1392,7 @@ class UMSimulator:
             self._index_remove(r, sel)
             r.on_device[sel] = False
             self._pf_clear(r, sel)
+        self._audited("host_read", name)
 
     def kernel(
         self,
@@ -1476,6 +1503,7 @@ class UMSimulator:
         # prefetches and eager restores in between.  Pure observation.
         self.report.thrash.observe(self.report.n_faults,
                                    self.report.n_evictions)
+        self._audited("kernel", name)
 
     def finish(self) -> SimReport:
         # prefetch copy time the compute stream never saw: busy copy-stream

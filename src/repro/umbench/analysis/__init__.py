@@ -1,0 +1,44 @@
+"""umlint — static trace/strategy analysis and engine invariant auditing
+(DESIGN.md §14).
+
+Three passes, one CLI (``python -m repro.umbench.analysis``):
+
+* :func:`lint_workload` / :func:`lint_ops` — dataflow rules UML001-UML009
+  over workload traces and recorded serving op streams;
+* :func:`check_contracts` — platform-gate and hook-whitelist contracts
+  UMC101-UMC104 over every registered variant strategy;
+* :func:`check_invariants` — the opt-in runtime audit behind
+  ``UMSimulator(..., audit=True)``.
+"""
+from repro.umbench.analysis.audit import AuditError, INVARIANTS, check_invariants
+from repro.umbench.analysis.contracts import (
+    CONTRACT_RULES,
+    EXPECTED_GATES,
+    SANCTIONED_HOOK_OPS,
+    check_contracts,
+)
+from repro.umbench.analysis.lint import Finding, RULES, lint_ops, lint_workload
+from repro.umbench.analysis.trace import (
+    Op,
+    RecordingSim,
+    record_serving_ops,
+    to_lint_ops,
+)
+
+__all__ = [
+    "AuditError",
+    "CONTRACT_RULES",
+    "EXPECTED_GATES",
+    "Finding",
+    "INVARIANTS",
+    "Op",
+    "RULES",
+    "RecordingSim",
+    "SANCTIONED_HOOK_OPS",
+    "check_contracts",
+    "check_invariants",
+    "lint_ops",
+    "lint_workload",
+    "record_serving_ops",
+    "to_lint_ops",
+]

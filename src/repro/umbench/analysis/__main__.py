@@ -1,0 +1,123 @@
+"""CLI for the static-analysis passes (DESIGN.md §14).
+
+``python -m repro.umbench.analysis`` with no pass flags runs everything:
+
+* ``--all-apps``   lint every builtin workload builder across the extended
+                   platform/regime matrix (UML rules);
+* ``--serving``    record small serving traces through the proxy and lint
+                   the op streams;
+* ``--contracts``  check every registered strategy's platform gate and
+                   hook whitelist (UMC rules).
+
+Exit status is 1 when any error-severity finding is reported, and — under
+``--strict`` — when any workload/contract finding is reported at all.
+Serving-trace warnings stay non-fatal even under ``--strict``: the
+request-driven lifecycle retires regions asynchronously, so a block
+allocated just before its request completes is a timing artifact, not a
+trace bug (errors there are still real and still fatal).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.umbench.analysis import audit, contracts, lint, trace
+
+GB = 1 << 30
+
+#: serving cells recorded for linting: strategies spanning the managed,
+#: pipelined, and coherent tiers (explicit is omitted — under KV
+#: oversubscription it aborts mid-trace and the partial stream is not a
+#: meaningful lint subject)
+SERVING_CELLS = (
+    ("poisson_short", "um", "p9-volta-nvlink", "kv_150"),
+    ("poisson_short", "um_both", "p9-volta-nvlink", "kv_150"),
+    ("poisson_short", "um_prefetch_pipelined", "p9-volta-nvlink", "kv_200"),
+    ("poisson_short", "um_hybrid_counters", "p9-volta-nvlink", "kv_150"),
+)
+
+
+def lint_all_apps() -> list[tuple[str, list[lint.Finding]]]:
+    """Lint every builtin app across the extended matrix, sized exactly as
+    ``harness.run_cell`` sizes the cell."""
+    from repro.umbench import harness, platforms as plat
+
+    out = []
+    for app, build in sorted(harness.WORKLOADS.items()):
+        for pname in harness.EXTENDED_PLATFORMS:
+            p = plat.PLATFORMS[pname]
+            capacity = int(p.device_mem_gb * GB)
+            for regime in harness.EXTENDED_REGIMES:
+                w = build(harness.REGIMES[regime] * p.device_mem_gb * GB)
+                findings = lint.lint_workload(
+                    w, capacity=capacity,
+                    expect_oversubscription=(regime != "in_memory"))
+                out.append((f"{app}:{pname}:{regime}", findings))
+    return out
+
+
+def lint_serving() -> list[tuple[str, list[lint.Finding]]]:
+    out = []
+    for pattern, strategy, platform, regime in SERVING_CELLS:
+        ops = trace.record_serving_ops(pattern, strategy, platform, regime)
+        label = f"serve_{pattern}:{platform}:{strategy}:{regime}"
+        out.append((label, lint.lint_ops(ops)))
+    return out
+
+
+def _print(label: str, findings) -> None:
+    for f in findings:
+        print(f"{label}: {f}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.umbench.analysis",
+        description="umlint: static trace/strategy analysis (DESIGN.md §14)")
+    ap.add_argument("--all-apps", action="store_true",
+                    help="lint every builtin app across the extended matrix")
+    ap.add_argument("--serving", action="store_true",
+                    help="record and lint serving traces")
+    ap.add_argument("--contracts", action="store_true",
+                    help="check strategy platform-gate and hook contracts")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warnings too (serving warnings excepted)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and audit invariants")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, (sev, desc) in {**lint.RULES,
+                                 **contracts.CONTRACT_RULES}.items():
+            print(f"{rid}  {sev:7s}  {desc}")
+        for inv in audit.INVARIANTS:
+            print(f"audit   invariant  {inv}")
+        return 0
+
+    run_all = not (args.all_apps or args.serving or args.contracts)
+    fatal = 0
+    checked = 0
+    if args.all_apps or run_all:
+        for label, findings in lint_all_apps():
+            checked += 1
+            _print(label, findings)
+            fatal += sum(1 for f in findings
+                         if f.severity == "error" or args.strict)
+    if args.serving or run_all:
+        for label, findings in lint_serving():
+            checked += 1
+            _print(label, findings)
+            fatal += sum(1 for f in findings if f.severity == "error")
+    if args.contracts or run_all:
+        findings = contracts.check_contracts()
+        checked += len(contracts.EXPECTED_GATES)
+        _print("contracts", findings)
+        fatal += sum(1 for f in findings
+                     if f.severity == "error" or args.strict)
+    print(f"umlint: {checked} subjects checked, "
+          f"{fatal} fatal finding(s)")
+    return 1 if fatal else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

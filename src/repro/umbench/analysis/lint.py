@@ -1,0 +1,315 @@
+"""umlint — static dataflow analysis over workload traces (DESIGN.md §14).
+
+:func:`lint_workload` walks a :class:`~repro.umbench.workload.Workload`'s
+step lists *without executing the simulator*: allocations, host I/O, kernel
+read/write sets, frees, and the advise/prefetch hints are compiled to a
+linear event stream and checked against the rule catalog below.
+:func:`lint_ops` runs the same dataflow core over a recorded op stream
+(``umbench.analysis.trace`` records one from a live serving scheduler), so
+traces that have no static Workload — the serving tier's request-driven
+region lifecycle — lint through the identical rules.
+
+Rules (the table is pinned against DESIGN.md §14 by
+tests/test_docs_consistency.py; every rule has a purpose-built bad fixture
+in tests/test_analysis_lint.py and zero findings across the builtin apps):
+
+========  ========  =====================================================
+rule      severity  meaning
+========  ========  =====================================================
+UML001    error     use of a region before (or without) its allocation
+UML002    error     use of a region after its free
+UML003    error     double free
+UML004    warning   dead region: never touched by any kernel
+UML005    warning   dead advise: READ_MOSTLY / PREFERRED_LOCATION hint on
+                    a region no kernel touches after the hint
+                    (ACCESSED_BY is exempt — remote mappings also serve
+                    host I/O)
+UML006    warning   per-step prefetch list names a region outside the
+                    workload's prefetch pool
+UML007    error     prefetch candidate freed before its anchored window
+                    (the ``schedule.derive_plan`` drop — see §11)
+UML008    warning   PRE_INIT advise on a region never host-written during
+                    setup (the anchor is meaningless; use POST_INIT)
+UML009    warning   oversubscription-unreachable: the cell expects
+                    eviction pressure but peak live bytes fit in device
+                    memory
+========  ========  =====================================================
+
+Severities: ``error`` findings describe traces the engine will reject or
+mis-serve (KeyErrors, wasted copies); ``warning`` findings describe dead
+weight or cells that cannot measure what they claim.  The CLI
+(``python -m repro.umbench.analysis``) fails on errors, and on warnings
+too under ``--strict``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.advise import Advise
+from repro.umbench import workload as wk
+
+__all__ = ["Finding", "RULES", "lint_ops", "lint_workload"]
+
+#: rule id -> (severity, one-line description); the docs table mirrors this
+RULES: dict[str, tuple[str, str]] = {
+    "UML001": ("error", "use of a region before (or without) its allocation"),
+    "UML002": ("error", "use of a region after its free"),
+    "UML003": ("error", "double free"),
+    "UML004": ("warning", "dead region: never touched by any kernel"),
+    "UML005": ("warning", "dead advise: hint on a region no kernel touches "
+                          "after it (ACCESSED_BY exempt)"),
+    "UML006": ("warning", "per-step prefetch list names a region outside "
+                          "the workload prefetch pool"),
+    "UML007": ("error", "prefetch candidate freed before its anchored "
+                        "window (the derive_plan drop)"),
+    "UML008": ("warning", "PRE_INIT advise on a region never host-written "
+                          "during setup"),
+    "UML009": ("warning", "oversubscription-unreachable: peak live bytes "
+                          "fit in device memory"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One linter (or contract-checker) finding.
+
+    ``step_idx`` indexes the flattened trace (setup + compute + teardown)
+    for workload lints, the op stream for recorded-trace lints; -1 marks
+    trace-level findings with no single anchoring step."""
+
+    rule_id: str
+    severity: str
+    step_idx: int
+    region: str | None
+    message: str
+
+    def __str__(self) -> str:
+        at = "" if self.step_idx < 0 else f" @ step {self.step_idx}"
+        return f"{self.rule_id} [{self.severity}]{at}: {self.message}"
+
+
+def _finding(rule: str, idx: int, region: str | None, msg: str) -> Finding:
+    return Finding(rule, RULES[rule][0], idx, region, msg)
+
+
+# -- the dataflow core ---------------------------------------------------------
+#
+# Events are (step_idx, tuple) pairs; the tuple vocabulary:
+#
+#   ("alloc", name, nbytes)          region comes to life
+#   ("free", name)                   region lifetime ends
+#   ("kernel", kname, reads, writes) one launch with its touch sets
+#   ("advise", name, kind)           kind in {"read_mostly",
+#                                    "preferred_location", "accessed_by"}
+#   ("prefetch", name)               an explicit prefetch call
+#   ("use", name, label)             any other region reference (host I/O,
+#                                    unadvise, counters, explicit staging)
+
+class _Dataflow:
+    def __init__(self):
+        self.findings: list[Finding] = []
+        self.allocated: dict[str, int] = {}       # name -> nbytes
+        self.freed: set[str] = set()
+        self.first_alloc: dict[str, int] = {}     # name -> first alloc idx
+        self.kernel_touched: set[str] = set()
+        # advise hints not yet followed by a kernel touch of their region:
+        # name -> [(idx, kind), ...]
+        self.pending_advise: dict[str, list[tuple[int, str]]] = {}
+        self.live_bytes = 0
+        self.peak_bytes = 0
+
+    def _ref(self, idx: int, name: str, what: str) -> bool:
+        """Region-reference check; False when the reference is invalid."""
+        if name in self.allocated:
+            return True
+        if name in self.freed:
+            self.findings.append(_finding(
+                "UML002", idx, name, f"{what} of {name!r} after its free"))
+        else:
+            self.findings.append(_finding(
+                "UML001", idx, name,
+                f"{what} of {name!r}, which is never allocated at this "
+                f"point"))
+        return False
+
+    def event(self, idx: int, ev: tuple) -> None:
+        op = ev[0]
+        if op == "alloc":
+            _, name, nbytes = ev
+            self.freed.discard(name)
+            self.allocated[name] = int(nbytes)
+            self.first_alloc.setdefault(name, idx)
+            self.live_bytes += int(nbytes)
+            self.peak_bytes = max(self.peak_bytes, self.live_bytes)
+        elif op == "free":
+            _, name = ev
+            if name in self.allocated:
+                self.live_bytes -= self.allocated.pop(name)
+                self.freed.add(name)
+            elif name in self.freed:
+                self.findings.append(_finding(
+                    "UML003", idx, name, f"double free of {name!r}"))
+            else:
+                self._ref(idx, name, "free")
+        elif op == "kernel":
+            _, kname, reads, writes = ev
+            for name in dict.fromkeys(tuple(reads) + tuple(writes)):
+                if self._ref(idx, name, f"kernel {kname!r} access"):
+                    self.kernel_touched.add(name)
+                    self.pending_advise.pop(name, None)
+        elif op == "advise":
+            _, name, kind = ev
+            if self._ref(idx, name, f"{kind} advise") and kind in (
+                    "read_mostly", "preferred_location"):
+                self.pending_advise.setdefault(name, []).append((idx, kind))
+        elif op == "prefetch":
+            _, name = ev
+            self._ref(idx, name, "prefetch")
+        else:
+            _, name, label = ev
+            self._ref(idx, name, label)
+
+    def finish(self, *, capacity: int | None,
+               expect_oversubscription: bool) -> list[Finding]:
+        for name, idx in sorted(self.first_alloc.items(),
+                                key=lambda kv: kv[1]):
+            if name not in self.kernel_touched:
+                self.findings.append(_finding(
+                    "UML004", idx, name,
+                    f"region {name!r} is never touched by any kernel"))
+        for name, hints in self.pending_advise.items():
+            for idx, kind in hints:
+                self.findings.append(_finding(
+                    "UML005", idx, name,
+                    f"{kind} advise on {name!r} with no kernel touch of it "
+                    f"afterwards"))
+        if expect_oversubscription and capacity is not None \
+                and self.peak_bytes <= capacity:
+            self.findings.append(_finding(
+                "UML009", -1, None,
+                f"cell expects oversubscription but peak live bytes "
+                f"({self.peak_bytes}) fit device memory ({capacity})"))
+        return sorted(self.findings, key=lambda f: (max(f.step_idx, 0),
+                                                    f.rule_id))
+
+
+# -- entry points --------------------------------------------------------------
+
+def lint_ops(ops, *, capacity: int | None = None,
+             expect_oversubscription: bool = False) -> list[Finding]:
+    """Lint a recorded op stream (see the event vocabulary above);
+    ``step_idx`` in the findings is the op's stream position."""
+    df = _Dataflow()
+    for idx, ev in enumerate(ops):
+        df.event(idx, ev)
+    return df.finish(capacity=capacity,
+                     expect_oversubscription=expect_oversubscription)
+
+
+_ADVISE_KIND = {
+    Advise.READ_MOSTLY: "read_mostly",
+    Advise.PREFERRED_LOCATION: "preferred_location",
+    Advise.ACCESSED_BY: "accessed_by",
+}
+
+
+def _compile(workload: wk.Workload) -> list[tuple[int, tuple]]:
+    """Lower a Workload to the dataflow event stream, mirroring the variant
+    lowering template's order: PRE_INIT hints fire right after their
+    region's allocation (the earliest the template can issue them),
+    POST_INIT hints at the staging point between setup and compute."""
+    pre = {h.name: [] for h in workload.advises_at(wk.PRE_INIT)}
+    for h in workload.advises_at(wk.PRE_INIT):
+        pre[h.name].append(h)
+    events: list[tuple[int, tuple]] = []
+    idx = 0
+    for step in workload.setup:
+        if isinstance(step, wk.Alloc):
+            events.append((idx, ("alloc", step.name, step.nbytes)))
+            for h in pre.pop(step.name, ()):
+                events.append((idx, ("advise", step.name,
+                                     _ADVISE_KIND[h.directive.advise])))
+        else:
+            events.append((idx, ("use", step.name, "host write")))
+        idx += 1
+    # PRE_INIT hints on never-allocated regions still reference them
+    for name, hints in pre.items():
+        for h in hints:
+            events.append((-1, ("advise", name,
+                                _ADVISE_KIND[h.directive.advise])))
+    staging = idx          # the staging point carries the setup-end index
+    for h in workload.advises_at(wk.POST_INIT):
+        events.append((staging, ("advise", h.name,
+                                 _ADVISE_KIND[h.directive.advise])))
+    for name in workload.prefetch:
+        events.append((staging, ("prefetch", name)))
+    for step in workload.compute:
+        if isinstance(step, wk.KernelStep):
+            events.append((idx, ("kernel", step.name, step.reads,
+                                 step.writes)))
+        elif isinstance(step, wk.Free):
+            events.append((idx, ("free", step.name)))
+        elif isinstance(step, wk.HostWrite):
+            events.append((idx, ("use", step.name, "host write")))
+        elif isinstance(step, wk.ReadBack):
+            events.append((idx, ("use", step.name, "readback")))
+        else:
+            events.append((idx, ("use", step.name, "host read")))
+        idx += 1
+    for step in workload.teardown:
+        label = "readback" if isinstance(step, wk.ReadBack) else "host read"
+        events.append((idx, ("use", step.name, label)))
+        idx += 1
+    return events
+
+
+def _structural(workload: wk.Workload) -> list[Finding]:
+    """The workload-only rules: per-step prefetch hygiene (UML006/UML007)
+    and PRE_INIT anchoring (UML008)."""
+    findings: list[Finding] = []
+    setup_len = len(workload.setup)
+    pool = set(workload.prefetch)
+    freed_at: dict[str, int] = {}
+    for ci, s in enumerate(workload.compute):
+        if isinstance(s, wk.Free) and s.name not in freed_at:
+            freed_at[s.name] = ci
+    for ci, s in enumerate(workload.compute):
+        if not isinstance(s, wk.KernelStep):
+            continue
+        idx = setup_len + ci
+        for name in s.prefetch:
+            if name not in pool:
+                findings.append(_finding(
+                    "UML006", idx, name,
+                    f"kernel {s.name!r} lists prefetch candidate {name!r} "
+                    f"outside the workload pool {sorted(pool)}"))
+        for name in s.prefetch_candidates(workload.prefetch):
+            if freed_at.get(name, 1 << 62) < ci:
+                findings.append(_finding(
+                    "UML007", idx, name,
+                    f"kernel {s.name!r} prefetch candidate {name!r} is "
+                    f"freed at compute step {freed_at[name]}, before this "
+                    f"step — derive_plan drops it (DESIGN.md §11)"))
+    written = set(workload.host_written())
+    for h in workload.advises_at(wk.PRE_INIT):
+        if h.name not in written:
+            findings.append(_finding(
+                "UML008", -1, h.name,
+                f"PRE_INIT {_ADVISE_KIND[h.directive.advise]} advise on "
+                f"{h.name!r}, which setup never host-writes — the "
+                f"pre-initialization anchor is meaningless"))
+    return findings
+
+
+def lint_workload(workload: wk.Workload, *, capacity: int | None = None,
+                  expect_oversubscription: bool = False) -> list[Finding]:
+    """Lint one workload trace.  ``capacity`` (device bytes) plus
+    ``expect_oversubscription=True`` arms UML009 for cells whose regime
+    claims eviction pressure."""
+    df = _Dataflow()
+    for idx, ev in _compile(workload):
+        df.event(idx, ev)
+    findings = df.finish(capacity=capacity,
+                         expect_oversubscription=expect_oversubscription)
+    findings.extend(_structural(workload))
+    return sorted(findings, key=lambda f: (max(f.step_idx, 0), f.rule_id))

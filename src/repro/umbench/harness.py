@@ -62,6 +62,7 @@ from repro.core.simulator import (
 )
 from repro.umbench import platforms as plat
 from repro.umbench import variants as var
+from repro.umbench.analysis.audit import AuditError
 from repro.umbench.apps import bfs, black_scholes, cg, conv_fft, fdtd3d, matmul
 from repro.umbench.workload import Workload
 
@@ -128,6 +129,10 @@ class CellResult:
     faults: str | None = None     # fault-scenario name, None = clean run
     error: str | None = None      # per-cell failure record (timeout/crash/
     #                               exception); report is None when set
+    error_kind: str | None = None  # analysis tag on the failure: "lint"
+    #                                (static findings blocked the run) or
+    #                                "audit" (AuditError mid-run); None for
+    #                                ordinary timeouts/crashes
 
     @property
     def total_s(self) -> float | None:
@@ -169,6 +174,8 @@ class CellResult:
                 "n_storm_faults": r.n_storm_faults,
             }),
             **({} if self.error is None else {"error": self.error}),
+            **({} if self.error_kind is None
+               else {"error_kind": self.error_kind}),
         }
 
 
@@ -214,7 +221,8 @@ def _cell_deadline(seconds: float | None):
 def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
              platform: SimPlatform | str, regime: str,
              granularity: str = "group", faults=None,
-             timeout_s: float | None = None) -> CellResult:
+             timeout_s: float | None = None, lint: bool = False,
+             audit: bool = False) -> CellResult:
     """Run one matrix cell: lower ``workload`` through ``strategy`` onto a
     fresh simulator.  ``workload``/``strategy``/``platform`` accept either
     objects or registry names; a string workload is sized to the regime's
@@ -223,6 +231,12 @@ def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
     ``faults`` (scenario name or ``FaultScenario``) attaches a seeded
     fault injector salted with the cell key, so the same cell under the
     same scenario injects identically in every worker (DESIGN.md §12).
+    ``lint=True`` statically lints the workload first (DESIGN.md §14) and
+    refuses to run a cell with error-severity findings — the findings come
+    back as the cell's failure record with ``error_kind="lint"``.
+    ``audit=True`` runs the simulator with the engine invariant audit armed;
+    an :class:`~repro.umbench.analysis.audit.AuditError` becomes a failure
+    record with ``error_kind="audit"``.
     ``timeout_s`` bounds the cell's wall clock.  Registry-resolution errors
     (unknown names) still raise — they are caller bugs — but any failure
     *executing* the cell (timeout included) returns a CellResult carrying
@@ -242,12 +256,23 @@ def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
     if not strat.available(p):
         return CellResult(workload.name, p.name, strat.name, regime, None,
                           granularity, fname)
-    sim = UMSimulator(p, granularity=granularity)
+    if lint:
+        from repro.umbench.analysis import lint_workload
+        errs = [f for f in lint_workload(
+                    workload, capacity=int(p.device_mem_gb * GB),
+                    expect_oversubscription=(regime != "in_memory"))
+                if f.severity == "error"]
+        if errs:
+            return CellResult(workload.name, p.name, strat.name, regime,
+                              None, granularity, fname,
+                              "; ".join(str(f) for f in errs), "lint")
+    sim = UMSimulator(p, granularity=granularity, audit=audit)
     if scenario is not None and scenario.enabled():
         salt = (f"{workload.name}:{p.name}:{strat.name}:{regime}:"
                 f"{granularity}")
         sim.set_fault_injector(fl.FaultInjector(scenario, salt))
     error = None
+    error_kind = None
     try:
         with _cell_deadline(timeout_s):
             strat.lower(workload, sim)
@@ -257,11 +282,15 @@ def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
     except CellTimeout:
         report = None
         error = f"timeout after {timeout_s}s"
+    except AuditError as e:
+        report = None
+        error = str(e)
+        error_kind = "audit"
     except Exception as e:  # noqa: BLE001 — the per-cell failure record
         report = None
         error = f"{type(e).__name__}: {e}"
     return CellResult(workload.name, p.name, strat.name, regime, report,
-                      granularity, fname, error)
+                      granularity, fname, error, error_kind)
 
 
 def _spec_fields(spec: tuple) -> tuple:

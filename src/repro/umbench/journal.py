@@ -105,6 +105,11 @@ class SweepJournal:
                        else cell.report.to_json_dict()),
             "error": getattr(cell, "error", None),
         }
+        error_kind = getattr(cell, "error_kind", None)
+        if error_kind is not None:
+            rec["error_kind"] = error_kind  # "lint"/"audit" analysis tag
+        #                                     (failures are retried on load,
+        #                                     so this is a diagnostic field)
         kind = getattr(cell, "journal_kind", "cell")
         if kind != "cell":
             rec["kind"] = kind  # e.g. "serving": reconstructed as its own

@@ -204,6 +204,16 @@ def derive_plan(workload: wk.Workload, capacity: int, chunk_bytes: int,
     planner = _Planner(capacity, chunk_bytes, sizes)
     windows: dict[int, list[PrefetchItem]] = {}
     executed = 0            # kernels the static model has replayed
+    # first Free per region (compute index): a candidate freed before its
+    # using kernel step must never be planned — by issue time the region
+    # name is gone from the simulator (sim.prefetch would KeyError) or the
+    # copy is pure waste, freed before the kernel reads it.  Reachable now
+    # that serving-style traces mix Free steps with the pipelined tiers;
+    # lint rule UML007 cross-references this drop.
+    freed_at: dict[str, int] = {}
+    for ci, s in enumerate(workload.compute):
+        if isinstance(s, wk.Free) and s.name not in freed_at:
+            freed_at[s.name] = ci
 
     def run_kernel(i: int) -> None:
         step = ks[i][1]
@@ -217,12 +227,20 @@ def derive_plan(workload: wk.Workload, capacity: int, chunk_bytes: int,
             run_kernel(executed)
             executed += 1
         anchor = STAGING if a < 0 else ks[a][0]
+        if freed_at and a >= 0:
+            # frees with compute index < the anchor step have executed by
+            # the time this window is issued: their planned bytes are gone
+            for n in [n for n in planner.resident
+                      if freed_at.get(n, 1 << 62) < ks[a][0]]:
+                del planner.resident[n]
         # bytes any kernel step between anchor and target still reads must
         # not be planned for eviction by this window
         protected = set()
         for i in range(max(a, 0), j + 1):
             protected.update(_touched(ks[i][1]))
         for name in step.prefetch_candidates(workload.prefetch):
+            if freed_at.get(name, 1 << 62) < ks[j][0]:
+                continue
             took = planner.admit(name, protected)
             if took <= 0:
                 continue

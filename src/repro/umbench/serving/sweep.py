@@ -22,6 +22,7 @@ import dataclasses
 from repro.core.simulator import GB, OversubscriptionError, UMSimulator
 from repro.umbench import platforms as plat
 from repro.umbench import variants as var
+from repro.umbench.analysis.audit import AuditError
 from repro.umbench.harness import CellTimeout, _cell_deadline, run_specs
 from repro.umbench.serving.metrics import ServingReport, summarize
 from repro.umbench.serving.scheduler import ServingConfig, serve
@@ -57,6 +58,7 @@ class ServingCellResult:
     granularity: str = "group"
     faults: str | None = None
     error: str | None = None
+    error_kind: str | None = None   # "audit" when an AuditError fired
 
     journal_kind = "serving"        # SweepJournal record tag
 
@@ -89,19 +91,23 @@ class ServingCellResult:
             }),
             **({} if self.faults is None else {"fault_scenario": self.faults}),
             **({} if self.error is None else {"error": self.error}),
+            **({} if self.error_kind is None
+               else {"error_kind": self.error_kind}),
         }
 
 
 def run_serving_cell(pattern, strategy, platform, regime: str,
                      granularity: str = "group", faults=None,
                      timeout_s: float | None = None,
-                     config: ServingConfig | None = None) -> ServingCellResult:
+                     config: ServingConfig | None = None,
+                     audit: bool = False) -> ServingCellResult:
     """Run one serving cell: generate the (cell-salted) trace, drive the
     continuous-batching scheduler through ``strategy`` on a fresh simulator,
     and aggregate per-request metrics.  Mirrors ``harness.run_cell``'s
     contract: registry names or objects, N/A on the platform gate and on
     explicit-under-oversubscription, failure records for timeouts and
-    in-cell exceptions."""
+    in-cell exceptions; ``audit=True`` arms the engine invariant audit
+    (failures tagged ``error_kind="audit"``)."""
     p = plat.PLATFORMS[platform] if isinstance(platform, str) else platform
     strat = (var.get_strategy(strategy) if isinstance(strategy, str)
              else strategy)
@@ -117,12 +123,13 @@ def run_serving_cell(pattern, strategy, platform, regime: str,
         return ServingCellResult(app, p.name, strat.name, regime, None,
                                  granularity, fname)
     cfg = config or ServingConfig()
-    sim = UMSimulator(p, granularity=granularity)
+    sim = UMSimulator(p, granularity=granularity, audit=audit)
     salt = f"{app}:{p.name}:{strat.name}:{regime}:{granularity}"
     if scenario is not None and scenario.enabled():
         sim.set_fault_injector(fl.FaultInjector(scenario, salt))
     requests = pat.generate(salt=salt)
     error = None
+    error_kind = None
     try:
         with _cell_deadline(timeout_s):
             sched = serve(sim, strat, requests, kv_frac, cfg)
@@ -134,11 +141,15 @@ def run_serving_cell(pattern, strategy, platform, regime: str,
     except CellTimeout:
         report = None
         error = f"timeout after {timeout_s}s"
+    except AuditError as e:
+        report = None
+        error = str(e)
+        error_kind = "audit"
     except Exception as e:  # noqa: BLE001 — the per-cell failure record
         report = None
         error = f"{type(e).__name__}: {e}"
     return ServingCellResult(app, p.name, strat.name, regime, report,
-                             granularity, fname, error)
+                             granularity, fname, error, error_kind)
 
 
 def _run_serving_cell_spec(spec: tuple) -> ServingCellResult:

@@ -129,6 +129,10 @@ class VariantStrategy:
                 # mid-trace readback (e.g. a staged output drain) lowers the
                 # same way as a trailing one
                 self.read_result(sim, step.name)
+            elif isinstance(step, wk.Free):
+                # every variant frees the same way: the lifetime end is part
+                # of the trace, not of the memory model
+                sim.free(step.name)
             else:
                 sim.host_read(step.name, step.nbytes)
         for step in workload.teardown:

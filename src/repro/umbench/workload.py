@@ -82,6 +82,19 @@ class ReadBack:
 
 
 @dataclasses.dataclass(frozen=True)
+class Free:
+    """Release a managed allocation mid-trace (cudaFree on a managed
+    pointer).  A compute-phase step: serving traces and phased apps free
+    regions whose lifetime ends before the trace does, handing their
+    device residency back to the pool.  Lifetime *semantics* (no
+    use-after-free, no double-free) are the trace linter's job
+    (``umbench.analysis.lint``), not ``Workload.validate`` — so linter
+    fixtures for those rules remain constructible."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelStep:
     """One GPU kernel launch with its read/write sets.
 
@@ -136,7 +149,7 @@ class AdviseHint:
 
 
 SetupStep = Alloc | HostWrite
-ComputeStep = KernelStep | HostWrite | HostRead | ReadBack
+ComputeStep = KernelStep | HostWrite | HostRead | ReadBack | Free
 TeardownStep = ReadBack | HostRead
 
 
@@ -185,7 +198,8 @@ class Workload:
         # a misfiled step would otherwise lower as the wrong simulator call
         for phase, steps, allowed in (
             ("setup", self.setup, (Alloc, HostWrite)),
-            ("compute", self.compute, (KernelStep, HostWrite, HostRead, ReadBack)),
+            ("compute", self.compute,
+             (KernelStep, HostWrite, HostRead, ReadBack, Free)),
             ("teardown", self.teardown, (ReadBack, HostRead)),
         ):
             for s in steps:
@@ -218,7 +232,7 @@ class Workload:
             if isinstance(s, KernelStep):
                 check(f"kernel {s.name}", s.reads + s.writes
                       + tuple(n for n, _ in s.partial) + s.prefetch)
-            elif isinstance(s, (HostWrite, HostRead, ReadBack)):
+            elif isinstance(s, (HostWrite, HostRead, ReadBack, Free)):
                 check(type(s).__name__, (s.name,))
         check("prefetch", self.prefetch)
         check("advise", (h.name for h in self.advises))
@@ -267,6 +281,12 @@ class WorkloadBuilder:
 
     def readback(self, name: str) -> "WorkloadBuilder":
         self._steps.append(ReadBack(name))
+        return self
+
+    def free(self, name: str) -> "WorkloadBuilder":
+        """Release ``name`` mid-compute; only legal after the first kernel
+        (``build()`` files pre-kernel steps into setup, which rejects it)."""
+        self._steps.append(Free(name))
         return self
 
     def kernel(self, name: str, *, flops: float, reads: Iterable[str],
@@ -331,7 +351,8 @@ class WorkloadBuilder:
 
 __all__ = [
     "PRE_INIT", "POST_INIT",
-    "Alloc", "HostWrite", "HostRead", "ReadBack", "KernelStep", "AdviseHint",
+    "Alloc", "HostWrite", "HostRead", "ReadBack", "Free", "KernelStep",
+    "AdviseHint",
     "Workload", "WorkloadBuilder",
     "Accessor", "Advise", "MemorySpace",
 ]

@@ -1,0 +1,246 @@
+"""Engine invariant audit (DESIGN.md §14): audit=True is bit-identical to
+audit=False across a seed-matrix sample, stays clean over randomized
+seeded traces, and catches deliberate corruption of the residency index —
+with the failure surfacing as an ``error_kind="audit"`` cell record."""
+import pytest
+
+from repro.core.simulator import (
+    GB,
+    OversubscriptionError,
+    SimPlatform,
+    UMSimulator,
+)
+from repro.umbench import harness
+from repro.umbench import variants as var
+from repro.umbench import workload as wk
+from repro.umbench.analysis import AuditError, INVARIANTS, check_invariants
+
+from _seeds import seed_note, seeded_rng
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+MB = 1 << 20
+
+SMALL = SimPlatform(
+    name="audit-small", device_mem_gb=64 / 1024, link_bw_gbs=50.0,
+    device_bw_gbs=500.0, device_flops_tps=5.0, fault_latency_us=20.0,
+    host_can_access_device=True, device_can_access_host=True,
+)
+
+
+# -- bit-identity: audit on == audit off ---------------------------------------
+
+MATRIX_SAMPLE = [
+    ("bs", "um", "intel-pascal-pcie", "oversubscribed", "group"),
+    ("cg", "um_both", "intel-volta-pcie", "in_memory", "group"),
+    ("graph500", "um_advise", "p9-volta-nvlink", "oversubscribed", "group"),
+    ("cublas", "um_prefetch_pipelined", "grace-hopper-c2c",
+     "oversubscribed_2x", "group"),
+    ("fdtd3d", "um_hybrid_counters", "p9-volta-nvlink", "oversubscribed",
+     "page"),
+]
+
+
+@pytest.mark.parametrize("app,variant,platform,regime,granularity",
+                         MATRIX_SAMPLE)
+def test_audit_bit_identical_on_matrix_sample(app, variant, platform,
+                                              regime, granularity):
+    plain = harness.run_cell(app, variant, platform, regime, granularity)
+    audited = harness.run_cell(app, variant, platform, regime, granularity,
+                               audit=True)
+    assert audited.error is None, audited.error
+    assert plain.report.to_json_dict() == audited.report.to_json_dict()
+
+
+def test_audit_bit_identical_on_serving_cell():
+    from repro.umbench.serving.sweep import run_serving_cell
+    plain = run_serving_cell("poisson_short", "um", "p9-volta-nvlink",
+                             "kv_200")
+    audited = run_serving_cell("poisson_short", "um", "p9-volta-nvlink",
+                               "kv_200", audit=True)
+    assert audited.error is None, audited.error
+    assert plain.report.to_json_dict() == audited.report.to_json_dict()
+
+
+# -- randomized traces stay invariant-clean ------------------------------------
+
+RANDOM_VARIANTS = ("um", "um_advise", "um_both", "um_prefetch_pipelined")
+
+
+def _random_workload(rng):
+    """A random small trace: 3-5 regions, random kernel touch sets, random
+    mid-trace frees (never used afterwards), random hints and pool."""
+    names = [f"r{i}" for i in range(rng.randint(3, 5))]
+    b = wk.WorkloadBuilder(f"rand{rng.randint(0, 1 << 30)}")
+    for n in names:
+        b.alloc(n, rng.randint(2, 28) * MB)
+        b.host_write(n)
+    for n in names:
+        if rng.random() < 0.4:
+            b.advise_read_mostly(n)
+        elif rng.random() < 0.3:
+            from repro.core.advise import MemorySpace
+            b.advise_preferred_location(n, MemorySpace.DEVICE)
+    pool = [n for n in names if rng.random() < 0.6]
+    if pool:
+        b.prefetch(*pool)
+    alive = list(names)
+    for i in range(rng.randint(4, 10)):
+        reads = rng.sample(alive, k=rng.randint(1, min(3, len(alive))))
+        writes = [rng.choice(alive)]
+        b.kernel(f"k{i}", flops=float(rng.randint(1, 20)) * 1e9,
+                 reads=tuple(reads), writes=tuple(writes))
+        if len(alive) > 2 and rng.random() < 0.25:
+            victim = rng.choice(alive)
+            alive.remove(victim)
+            b.free(victim)     # later kernels only sample from `alive`
+    for n in rng.sample(alive, k=min(2, len(alive))):
+        b.readback(n)
+    return b.build()
+
+
+def _run_audited(seed_offset: int, case: int):
+    rng = seeded_rng(case + seed_offset)
+    w = _random_workload(rng)
+    strat = var.get_strategy(rng.choice(RANDOM_VARIANTS))
+    granularity = rng.choice(("group", "page"))
+    sim = UMSimulator(SMALL, granularity=granularity, audit=True)
+    try:
+        strat.lower(w, sim)
+    except OversubscriptionError:
+        pass
+    return sim
+
+
+@pytest.mark.parametrize("case", range(12))
+def test_randomized_traces_audit_clean(case):
+    try:
+        _run_audited(0, case)
+    except AuditError as e:
+        pytest.fail(f"{seed_note(case)}: {e}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_random_trace_audit_clean(seed):
+    """Property form of the randomized suite (runs when hypothesis is
+    installed — CI's lint-and-audit job; collected as a skip otherwise)."""
+    import random
+    rng = random.Random(seed)
+    w = _random_workload(rng)
+    strat = var.get_strategy(rng.choice(RANDOM_VARIANTS))
+    sim = UMSimulator(SMALL, granularity=rng.choice(("group", "page")),
+                      audit=True)
+    try:
+        strat.lower(w, sim)
+    except OversubscriptionError:
+        pass
+
+
+# -- corruption is caught ------------------------------------------------------
+
+def _probe_region(sim):
+    name = next(iter(sim.regions))
+    return sim.regions[name]
+
+
+# corruption -> the invariants allowed to trip.  The audit fires at the
+# next op boundary, after a full kernel of engine activity on the damaged
+# state, so related invariants may legitimately catch it first.
+CORRUPTIONS = {
+    "q_live_counters": (
+        lambda r, sim: r.q_live.__setitem__(0, r.q_live[0] + 1),
+        {"q_live_counters"}),
+    "queue_disjoint": (
+        lambda r, sim: r.entry_ptr.__setitem__(
+            int(__import__("numpy").flatnonzero(r.entry_ptr >= 0)[0]), -1),
+        {"queue_disjoint", "q_live_counters"}),
+    "stamp_order": (
+        lambda r, sim: r.stamp.__setitem__(
+            slice(None), r.stamp[::-1].copy()),
+        {"stamp_order"}),
+    "device_used": (
+        lambda r, sim: setattr(
+            sim, "device_used", sim.device_used + int(r.sizes[0])),
+        {"device_used"}),
+}
+
+
+@pytest.mark.parametrize("expect", sorted(CORRUPTIONS))
+def test_audit_catches_corruption(expect):
+    corrupt, allowed = CORRUPTIONS[expect]
+    b = wk.WorkloadBuilder("victim")
+    b.alloc("A", 16 * MB).alloc("B", 16 * MB)
+    b.host_write("A").host_write("B")
+    # k1 must not touch A: any kernel touch re-files (and freshly
+    # re-stamps) the region, healing stamp corruption before the post-op
+    # audit point ever sees it
+    b.kernel("k0", flops=1e9, reads=("A",), writes=("B",))
+    b.kernel("k1", flops=1e9, reads=("B",), writes=("B",))
+    w = b.build()
+
+    fired = {}
+
+    class Corrupting(var.UMStrategy):
+        name = "audit_corruptor"
+
+        def before_step(self, sim, workload, idx, step):
+            real = getattr(sim, "_sim", sim)
+            if idx == 1 and not fired:
+                corrupt(_probe_region(real), real)
+                fired["yes"] = True
+
+    sim = UMSimulator(SMALL, audit=True)
+    with pytest.raises(AuditError) as exc:
+        Corrupting().lower(w, sim)
+    assert fired, "corruption never injected"
+    assert exc.value.invariant in allowed, str(exc.value)
+    assert exc.value.invariant in INVARIANTS
+    assert exc.value.op is not None
+
+
+def test_audit_error_becomes_cell_failure_record():
+    class CorruptingRegistered(var.UMStrategy):
+        name = "audit_corruptor_cell"
+
+        def before_step(self, sim, workload, idx, step):
+            if sim.regions:
+                r = next(iter(sim.regions.values()))
+                r.q_live[0] += 1
+
+    try:
+        var.register(CorruptingRegistered(), replace=True)
+        cell = harness.run_cell("bs", "audit_corruptor_cell",
+                                "intel-pascal-pcie", "in_memory",
+                                audit=True)
+    finally:
+        var._REGISTRY.pop("audit_corruptor_cell", None)
+    assert cell.report is None
+    assert cell.error_kind == "audit"
+    assert "q_live_counters" in cell.error
+    assert cell.row()["error_kind"] == "audit"
+    # and without audit=True the same corruption sails through silently —
+    # the audit is the only thing standing between it and a wrong number
+    try:
+        var.register(CorruptingRegistered(), replace=True)
+        unaudited = harness.run_cell("bs", "audit_corruptor_cell",
+                                     "intel-pascal-pcie", "in_memory")
+    finally:
+        var._REGISTRY.pop("audit_corruptor_cell", None)
+    assert unaudited.error_kind != "audit"
+
+
+def test_check_invariants_direct_and_off_mode_cost():
+    """check_invariants is callable directly on a live sim; audit=False
+    leaves the hook unset (the near-zero-cost off mode)."""
+    sim = UMSimulator(SMALL, audit=False)
+    assert sim._audit is None
+    sim.alloc("A", 8 * MB)
+    sim.host_write("A")
+    sim.kernel("k", flops=1e9, reads=("A",), writes=())
+    check_invariants(sim, "manual")    # clean: no raise
+    on = UMSimulator(SMALL, audit=True)
+    assert on._audit is not None

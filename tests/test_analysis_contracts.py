@@ -1,0 +1,139 @@
+"""Strategy contract checker (DESIGN.md §14): the whole registry passes
+both contracts, each UMC rule fires on a purpose-built violation, and the
+behavioural hook probe actually exercises the hooks it polices."""
+import pytest
+
+from repro.umbench import platforms as plat
+from repro.umbench import variants as var
+from repro.umbench.analysis import (
+    CONTRACT_RULES,
+    EXPECTED_GATES,
+    SANCTIONED_HOOK_OPS,
+    check_contracts,
+)
+from repro.umbench.analysis import contracts
+from repro.umbench.analysis.trace import RecordingSim
+
+
+def rule_ids(findings):
+    return {f.rule_id for f in findings}
+
+
+@pytest.fixture
+def temp_strategy():
+    """Register a strategy for one test and guarantee de-registration (the
+    registry is process-global; test_docs_consistency pins it)."""
+    registered = []
+
+    def _register(strategy):
+        var.register(strategy, replace=True)
+        registered.append(strategy.name)
+        return strategy
+
+    yield _register
+    for name in registered:
+        var._REGISTRY.pop(name, None)
+
+
+def test_whole_registry_passes_both_contracts():
+    findings = check_contracts()
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_gate_table_is_total_over_registry():
+    assert set(EXPECTED_GATES) == set(var.strategy_names())
+
+
+def test_umc101_gate_mismatch(monkeypatch):
+    # document um under the coherent-fabric gate: its available() (always
+    # True) now disagrees on every non-coherent platform
+    monkeypatch.setitem(contracts.EXPECTED_GATES, "um", "coherent_fabric")
+    findings = check_contracts(["um"], hooks=False)
+    assert rule_ids(findings) == {"UMC101"}
+    wrong = findings[0].message
+    assert "intel-pascal-pcie" in wrong
+
+
+def test_umc102_undocumented_strategy(temp_strategy):
+    class Undocumented(var.UMStrategy):
+        name = "undocumented_probe"
+
+    temp_strategy(Undocumented())
+    findings = check_contracts(["undocumented_probe"], hooks=False)
+    assert rule_ids(findings) == {"UMC102"}
+
+
+def test_umc104_stale_gate_table_entry(monkeypatch):
+    monkeypatch.setitem(contracts.EXPECTED_GATES, "ghost_tier", "all")
+    findings = check_contracts(["um"], hooks=False)
+    assert rule_ids(findings) == {"UMC104"}
+    assert findings[0].region == "ghost_tier"
+
+
+def test_umc103_corrupting_before_step(temp_strategy):
+    class CorruptHook(var.UMStrategy):
+        name = "corrupt_hook_probe"
+
+        def before_step(self, sim, workload, idx, step):
+            sim.host_write("A")
+
+    temp_strategy(CorruptHook())
+    findings = check_contracts(["corrupt_hook_probe"])
+    ids = rule_ids(findings)
+    assert "UMC103" in ids
+    f = next(f for f in findings if f.rule_id == "UMC103")
+    assert f.region == "corrupt_hook_probe"
+    assert "host_write" in f.message and "before_step" in f.message
+
+
+def test_umc103_corrupting_serving_step(temp_strategy):
+    class CorruptServing(var.UMStrategy):
+        name = "corrupt_serving_probe"
+
+        def serving_step(self, sim, live):
+            for name in list(sim.regions):
+                if name.startswith("kv/"):
+                    sim.free(name)
+                    return
+
+    temp_strategy(CorruptServing())
+    findings = check_contracts(["corrupt_serving_probe"])
+    f = next(f for f in findings if f.rule_id == "UMC103")
+    assert "free" in f.message and "serving_step" in f.message
+
+
+def test_sanctioned_hook_ops_are_hints_only():
+    mutators = {"alloc", "free", "host_write", "host_read", "kernel",
+                "explicit_copy_to_device", "explicit_alloc",
+                "explicit_copy_to_host"}
+    assert not SANCTIONED_HOOK_OPS & mutators
+
+
+def test_probe_actually_exercises_hooks():
+    """The behavioural check is only meaningful if the probe drives the
+    hooks: the adaptive tier's thrash-shedding unadvise must appear,
+    phase-tagged, in the probe recording."""
+    from repro.core.simulator import UMSimulator
+
+    rec = RecordingSim(UMSimulator(contracts.PROBE_PLATFORM))
+    import copy
+
+    strategy = var.get_strategy("um_adaptive_advise")
+    probe = copy.copy(strategy)
+    orig = strategy.before_step
+
+    def tagged(sim, workload, idx, step):
+        with rec.phase("before_step"):
+            orig(sim, workload, idx, step)
+
+    probe.before_step = tagged
+    probe.lower(contracts.probe_workload(), rec)
+    hook_ops = [op for op in rec.ops if op.phase == "before_step"]
+    assert hook_ops, "probe workload never triggered the adaptive hook"
+    assert {op.name for op in hook_ops} <= SANCTIONED_HOOK_OPS
+
+
+def test_contract_rules_catalog_disjoint_from_lint():
+    from repro.umbench.analysis import RULES
+    assert not set(CONTRACT_RULES) & set(RULES)
+    assert all(sev == "error" for sev, _ in CONTRACT_RULES.values())

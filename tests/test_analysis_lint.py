@@ -1,0 +1,197 @@
+"""umlint (DESIGN.md §14): every documented rule fires on a purpose-built
+bad fixture, the builtin apps and recorded serving traces lint clean across
+the full matrix, and lint failure records flow through run_cell -> row() ->
+journal -> benchmarks cell_deltas with ``error_kind="lint"``."""
+import json
+
+import pytest
+
+from repro.umbench import harness
+from repro.umbench import platforms as plat
+from repro.umbench import workload as wk
+from repro.umbench.analysis import RULES, lint_ops, lint_workload
+from repro.umbench.analysis.__main__ import SERVING_CELLS, lint_all_apps
+from repro.umbench.analysis.trace import record_serving_ops
+
+GB = 1 << 30
+MB = 1 << 20
+
+
+def rule_ids(findings):
+    return {f.rule_id for f in findings}
+
+
+def _k(name, reads, writes, prefetch=()):
+    return wk.KernelStep(name, 1e9, tuple(reads), tuple(writes),
+                         prefetch=tuple(prefetch))
+
+
+def _base_setup(*names):
+    steps = []
+    for n in names:
+        steps.append(wk.Alloc(n, 4 * MB))
+        steps.append(wk.HostWrite(n))
+    return tuple(steps)
+
+
+# one deliberately-bad hand-built Workload per rule (hand-built because
+# Workload.validate rejects some of these on purpose — the linter owns
+# lifetime semantics, validate owns structure)
+def _fixtures():
+    yield "UML001", wk.Workload(
+        "use_before_alloc", _base_setup("A"),
+        (_k("k0", ("A", "ghost"), ("A",)),), ())
+    yield "UML002", wk.Workload(
+        "use_after_free", _base_setup("A", "B"),
+        (_k("k0", ("A", "B"), ("B",)), wk.Free("A"),
+         _k("k1", ("A",), ("B",))), ())
+    yield "UML003", wk.Workload(
+        "double_free", _base_setup("A", "B"),
+        (_k("k0", ("A", "B"), ("B",)), wk.Free("A"), wk.Free("A")), ())
+    yield "UML004", wk.Workload(
+        "dead_region", _base_setup("A", "B", "scratch"),
+        (_k("k0", ("A",), ("B",)),), (wk.ReadBack("B"),))
+    yield "UML005", wk.Workload(
+        "dead_advise", _base_setup("A", "B", "C"),
+        (_k("k0", ("A",), ("B",)),), (wk.ReadBack("B"),),
+        advises=(wk.AdviseHint("C", wk.set_read_mostly(), wk.POST_INIT),))
+    yield "UML006", wk.Workload(
+        "prefetch_outside_pool", _base_setup("A", "B"),
+        (_k("k0", ("A",), ("B",)),
+         _k("k1", ("A",), ("B",), prefetch=("B",))), (),
+        prefetch=("A",))
+    yield "UML007", wk.Workload(
+        "prefetch_freed_candidate", _base_setup("A", "B"),
+        (_k("k0", ("A", "B"), ("A",)), wk.Free("B"),
+         _k("k1", ("A",), ("A",)),
+         _k("k2", ("A",), ("A",), prefetch=("B",))), (),
+        prefetch=("A", "B"))
+    yield "UML008", wk.Workload(
+        "pre_init_unwritten",
+        (wk.Alloc("A", 4 * MB), wk.HostWrite("A"), wk.Alloc("out", 4 * MB)),
+        (_k("k0", ("A",), ("out",)),), (wk.ReadBack("out"),),
+        advises=(wk.AdviseHint("out", wk.set_read_mostly(), wk.PRE_INIT),))
+    # UML009 needs capacity context; see test_uml009 below
+
+
+@pytest.mark.parametrize("rule,workload", list(_fixtures()),
+                         ids=[r for r, _ in _fixtures()])
+def test_rule_fires_on_bad_fixture(rule, workload):
+    findings = lint_workload(workload)
+    assert rule in rule_ids(findings), (
+        f"{rule} not raised on {workload.name}: "
+        f"{[str(f) for f in findings]}")
+
+
+def test_uml009_oversubscription_unreachable():
+    w = wk.Workload("tiny", _base_setup("A", "B"),
+                    (_k("k0", ("A",), ("B",)),), (wk.ReadBack("B"),))
+    findings = lint_workload(w, capacity=GB, expect_oversubscription=True)
+    assert rule_ids(findings) == {"UML009"}
+    # and silent when the cell really oversubscribes or doesn't claim to
+    assert lint_workload(w, capacity=MB, expect_oversubscription=True) == []
+    assert lint_workload(w, capacity=GB) == []
+
+
+def test_every_documented_rule_has_a_firing_fixture():
+    covered = {r for r, _ in _fixtures()} | {"UML009"}
+    assert covered == set(RULES)
+
+
+def test_findings_are_ordered_and_printable():
+    w = wk.Workload("multi", _base_setup("A"),
+                    (wk.Free("A"), wk.Free("A"), _k("k", ("A",), ())), ())
+    findings = lint_workload(w)
+    # UML004 anchors at A's alloc (idx 0), then the frees in trace order
+    assert [f.rule_id for f in findings] == ["UML004", "UML003", "UML002"]
+    assert all(f.rule_id in str(f) and f.severity in str(f)
+               for f in findings)
+
+
+# -- zero false positives across the repo's own traces -------------------------
+
+def test_builtin_apps_lint_clean_across_matrix():
+    """Every builtin app x extended platform x regime has zero findings —
+    warnings included — with UML009 armed for the oversubscribed regimes."""
+    results = lint_all_apps()
+    assert len(results) == (len(harness.WORKLOADS)
+                            * len(harness.EXTENDED_PLATFORMS)
+                            * len(harness.EXTENDED_REGIMES))
+    dirty = {label: [str(f) for f in findings]
+             for label, findings in results if findings}
+    assert not dirty, dirty
+
+
+@pytest.mark.parametrize("pattern,strategy,platform,regime", SERVING_CELLS)
+def test_serving_traces_lint_clean(pattern, strategy, platform, regime):
+    """Recorded serving op streams carry no error-severity findings (the
+    request-driven lifecycle may leave timing-artifact warnings; errors
+    would be real trace bugs)."""
+    ops = record_serving_ops(pattern, strategy, platform, regime)
+    assert ops, "no ops recorded — probe wiring broken"
+    errors = [f for f in lint_ops(ops) if f.severity == "error"]
+    assert not errors, [str(f) for f in errors]
+
+
+def test_lint_ops_catches_serving_style_leak():
+    """The op-stream entry point sees the same lifetime rules: a freed KV
+    block referenced by a later decode kernel is a UML002."""
+    ops = [("alloc", "kv/1/0", 4 * MB), ("kernel", "prefill", ("kv/1/0",),
+                                         ("kv/1/0",)),
+           ("free", "kv/1/0"),
+           ("kernel", "decode", ("kv/1/0",), ())]
+    assert "UML002" in rule_ids(lint_ops(ops))
+
+
+# -- harness / journal / benchmarks integration --------------------------------
+
+BAD = wk.Workload(
+    "bad_cell", _base_setup("A", "B"),
+    (_k("k0", ("A", "B"), ("B",)), wk.Free("A"), _k("k1", ("A",), ("B",))),
+    ())
+
+
+def test_run_cell_lint_refusal():
+    cell = harness.run_cell(BAD, "um", "intel-pascal-pcie", "in_memory",
+                            lint=True)
+    assert cell.report is None
+    assert cell.error_kind == "lint"
+    assert "UML002" in cell.error
+    row = cell.row()
+    assert row["error_kind"] == "lint" and "UML002" in row["error"]
+
+
+def test_run_cell_lint_clean_cell_unaffected():
+    plain = harness.run_cell("bs", "um", "intel-pascal-pcie", "in_memory")
+    linted = harness.run_cell("bs", "um", "intel-pascal-pcie", "in_memory",
+                              lint=True)
+    assert linted.error is None and linted.error_kind is None
+    assert plain.report.to_json_dict() == linted.report.to_json_dict()
+    assert "error_kind" not in linted.row()
+
+
+def test_journal_records_error_kind(tmp_path):
+    from repro.umbench.journal import SweepJournal
+    cell = harness.run_cell(BAD, "um", "intel-pascal-pcie", "in_memory",
+                            lint=True)
+    path = tmp_path / "j.jsonl"
+    with SweepJournal(str(path)) as j:
+        j.record(cell)
+    rec = json.loads(path.read_text().strip())
+    assert rec["error_kind"] == "lint"
+    # failures stay incomplete on load: the resume retries them
+    assert SweepJournal(str(path)).completed == {}
+
+
+def test_cell_deltas_surfaces_error_kind():
+    from benchmarks.run import cell_deltas
+    row = {"app": "bad_cell", "platform": "intel-pascal-pcie",
+           "variant": "um", "regime": "in_memory", "granularity": "group",
+           "total_s": None, "error": "UML002 ...", "error_kind": "lint"}
+    d = cell_deltas([], [row])
+    assert d["cells_error"] == 1
+    assert d["errored"][0]["error_kind"] == "lint"
+    # rows without the tag keep the old errored shape
+    row2 = dict(row)
+    del row2["error_kind"]
+    assert "error_kind" not in cell_deltas([], [row2])["errored"][0]

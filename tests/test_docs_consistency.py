@@ -69,3 +69,27 @@ def test_registry_matches_extended_matrix():
     variant axis and the registry are the same set."""
     from repro.umbench.harness import EXTENDED_VARIANTS
     assert set(EXTENDED_VARIANTS) == set(strategy_names())
+
+
+def test_analysis_rule_tables_match_registered_rules():
+    """DESIGN.md §14's rule tables (lint UML* + contract UMC*, both under
+    a ``rule`` header column) list exactly the registered rule ids —
+    the ISSUE 8 analogue of the variant-table gate."""
+    from repro.umbench.analysis import CONTRACT_RULES, RULES
+    documented = doc_table_names(REPO / "DESIGN.md", "rule")
+    assert documented, "DESIGN.md: no rule tables found"
+    registered = set(RULES) | set(CONTRACT_RULES)
+    assert documented == registered, (
+        f"DESIGN.md rule tables diverge from the registered rule sets: "
+        f"undocumented={sorted(registered - documented)}, "
+        f"stale={sorted(documented - registered)}")
+
+
+def test_audit_invariant_table_matches_registry():
+    from repro.umbench.analysis import INVARIANTS
+    documented = doc_table_names(REPO / "DESIGN.md", "invariant")
+    assert documented, "DESIGN.md: no invariant table found"
+    assert documented == set(INVARIANTS), (
+        f"DESIGN.md invariant table diverges from audit.INVARIANTS: "
+        f"undocumented={sorted(set(INVARIANTS) - documented)}, "
+        f"stale={sorted(documented - set(INVARIANTS))}")

@@ -399,3 +399,37 @@ def test_row_carries_overlap_columns():
     for k in ("prefetch_copy_s", "prefetch_wait_s", "prefetch_overlap_s"):
         assert k in row
     assert row["variant"] == "um_prefetch_pipelined"
+
+
+def test_plan_drops_candidates_freed_before_their_window():
+    """Regression (ISSUE 8): a per-step prefetch candidate freed before its
+    anchored window must be dropped by derive_plan — pre-fix the plan kept
+    it and ``plan.issue`` called ``sim.prefetch`` on a name the Free had
+    already removed (KeyError mid-lowering).  Lint rule UML007 flags the
+    same trace shape statically."""
+    from repro.umbench import workload as wk
+    from repro.umbench.analysis import lint_workload
+
+    b = wk.WorkloadBuilder("freed_candidate")
+    b.alloc("A", 8 * MB).alloc("B", 8 * MB)
+    b.host_write("A").host_write("B")
+    b.prefetch("A", "B")
+    b.kernel("k0", flops=1e9, reads=("A", "B"), writes=("A",))
+    b.free("B")
+    b.kernel("k1", flops=1e9, reads=("A",), writes=("A",))
+    b.kernel("k2", flops=1e9, reads=("A",), writes=("A",), prefetch=("B",))
+    w = b.build()
+
+    plan = schedule.derive_plan(w, 4 * GB, 2 * MB)
+    freed_idx = next(i for i, s in enumerate(w.compute)
+                     if isinstance(s, wk.Free))
+    late = [i.name for win in plan.windows if win.anchor >= freed_idx
+            for i in win.items]
+    assert "B" not in late, plan
+    # staging-point prefetch of B (while still alive) remains legal
+    cell = run_cell(w, "um_prefetch_pipelined", "intel-pascal-pcie",
+                    "in_memory")
+    assert cell.error is None, cell.error       # pre-fix: KeyError: 'B'
+    assert cell.report is not None
+    # the linter cross-references the same drop statically
+    assert "UML007" in {f.rule_id for f in lint_workload(w)}
