@@ -42,6 +42,10 @@ _DEGRADATION: list[CellResult] | None = None
 # workers actually handed to the pooled sweeps (run.py records this so the
 # BENCH artifact's sweep_workers matches the pool that really ran)
 LAST_SWEEP_WORKERS: int | None = None
+# per-sweep record of the worker count each pooled sweep REALLY used — the
+# BENCH artifact derives sweep_workers from this instead of trusting
+# whichever sweep happened to run last (satellite fix, ISSUE 9)
+SWEEP_WORKERS_USED: dict[str, int] = {}
 
 # Crash-safe sweep checkpointing (DESIGN.md §12): run.py points this at a
 # journal directory before the sweeps run; ``--resume`` loads completed
@@ -52,11 +56,23 @@ SWEEP_RESUME: bool = False
 # per-sweep (reused, ran) counters from the journals, for run.py's log line
 JOURNAL_STATS: dict[str, tuple[int, int]] = {}
 
+# Content-addressed cell cache (DESIGN.md §15): run.py points this at a
+# persistent directory; each pooled sweep then answers unchanged cells from
+# disk and leaves its hit/miss tallies in CACHE_STATS for the artifact.
+SWEEP_CACHE_DIR: str | None = None
+CACHE_STATS: dict[str, dict] = {}
+CACHE_HIT_KEYS: set[tuple] = set()
+
 
 def configure_journals(directory: str | None, resume: bool = False) -> None:
     global SWEEP_JOURNAL_DIR, SWEEP_RESUME
     SWEEP_JOURNAL_DIR = directory
     SWEEP_RESUME = resume
+
+
+def configure_cache(directory: str | None) -> None:
+    global SWEEP_CACHE_DIR
+    SWEEP_CACHE_DIR = directory
 
 
 def _journal(name: str):
@@ -74,28 +90,51 @@ def _close_journal(name: str, journal) -> None:
         journal.close()
 
 
+def _cache(name: str):
+    """A CellCache scope for the named sweep, or None when caching is off."""
+    if SWEEP_CACHE_DIR is None:
+        return None
+    from repro.umbench.cellcache import CellCache
+    return CellCache(SWEEP_CACHE_DIR)
+
+
+def _close_cache(name: str, cache) -> None:
+    if cache is not None:
+        CACHE_STATS[name] = cache.stats()
+        CACHE_HIT_KEYS.update(cache.hit_keys)
+
+
+def _used_workers(name: str, workers: int | None) -> int:
+    w = workers or default_workers()
+    SWEEP_WORKERS_USED[name] = w
+    global LAST_SWEEP_WORKERS
+    LAST_SWEEP_WORKERS = w
+    return w
+
+
 def matrix_cells(extended: bool = False,
                  workers: int | None = None) -> list[CellResult]:
     """The (memoized) matrix sweep; ``extended`` adds grace-hopper-c2c, the
     200 % regime, and the beyond-paper variant tiers (svm_remote,
     um_hybrid_counters, um_pinned_zero_copy) on top of the seed 240 cells,
     fanned over ``workers`` processes (default: one per core)."""
-    global _MATRIX, _EXTENDED, LAST_SWEEP_WORKERS
+    global _MATRIX, _EXTENDED
     if extended:
         if _EXTENDED is None:
-            LAST_SWEEP_WORKERS = workers or default_workers()
             journal = _journal("ext")
+            cache = _cache("ext")
             try:
                 _EXTENDED = run_matrix(
                     platform_names=EXTENDED_PLATFORMS,
                     regimes=("in_memory", "oversubscribed",
                              "oversubscribed_2x"),
                     variants=EXTENDED_VARIANTS,
-                    workers=LAST_SWEEP_WORKERS,
-                    journal=journal,
+                    workers=_used_workers("ext", workers),
+                    journal=journal, cache=cache,
                 )
             finally:
                 _close_journal("ext", journal)
+                _close_cache("ext", cache)
         return _EXTENDED
     if _MATRIX is None:
         _MATRIX = run_matrix()
@@ -106,15 +145,16 @@ def page_cells(workers: int | None = None) -> list[CellResult]:
     """The (memoized) full-matrix 64 KB page-granularity sweep — every app x
     extended platform x extended variant x regime cell with chunk state
     tracked per system page (the Fig. 7c/8c fault-explosion axis)."""
-    global _PAGE, LAST_SWEEP_WORKERS
+    global _PAGE
     if _PAGE is None:
-        LAST_SWEEP_WORKERS = workers or default_workers()
         journal = _journal("page")
+        cache = _cache("page")
         try:
-            _PAGE = run_page_matrix(workers=LAST_SWEEP_WORKERS,
-                                    journal=journal)
+            _PAGE = run_page_matrix(workers=_used_workers("page", workers),
+                                    journal=journal, cache=cache)
         finally:
             _close_journal("page", journal)
+            _close_cache("page", cache)
     return _PAGE
 
 
@@ -309,7 +349,7 @@ def degradation_cells(workers: int | None = None) -> list[CellResult]:
     pair tier x traced app x coherent platform, oversubscribed.  Clean
     baselines are NOT re-run here — they are the same oversubscribed cells
     the extended matrix already holds."""
-    global _DEGRADATION, LAST_SWEEP_WORKERS
+    global _DEGRADATION
     if _DEGRADATION is None:
         from repro.core.faults import SCENARIOS
         specs = [
@@ -320,13 +360,15 @@ def degradation_cells(workers: int | None = None) -> list[CellResult]:
             for app in DEGRADATION_APPS
             for pname in DEGRADATION_PLATS
         ]
-        LAST_SWEEP_WORKERS = workers or default_workers()
         journal = _journal("degradation")
+        cache = _cache("degradation")
         try:
-            _DEGRADATION = run_specs(specs, workers=LAST_SWEEP_WORKERS,
-                                     journal=journal)
+            _DEGRADATION = run_specs(
+                specs, workers=_used_workers("degradation", workers),
+                journal=journal, cache=cache)
         finally:
             _close_journal("degradation", journal)
+            _close_cache("degradation", cache)
     return _DEGRADATION
 
 
@@ -400,7 +442,7 @@ def serving_cells(workers: int | None = None) -> list:
     """The (memoized) clean serving sweep: every registry variant x traffic
     pattern x KV regime on both serving platforms, pooled and journaled
     like the matrix sweeps."""
-    global _SERVING, LAST_SWEEP_WORKERS
+    global _SERVING
     if _SERVING is None:
         from repro.umbench.serving import (
             SERVING_REGIMES,
@@ -409,13 +451,15 @@ def serving_cells(workers: int | None = None) -> list:
         )
         specs = serving_specs(SERVING_PATTERNS, SERVING_PLATFORMS,
                               tuple(SERVING_REGIMES))
-        LAST_SWEEP_WORKERS = workers or default_workers()
         journal = _journal("serving")
+        cache = _cache("serving")
         try:
-            _SERVING = run_serving_specs(specs, workers=LAST_SWEEP_WORKERS,
-                                         journal=journal)
+            _SERVING = run_serving_specs(
+                specs, workers=_used_workers("serving", workers),
+                journal=journal, cache=cache)
         finally:
             _close_journal("serving", journal)
+            _close_cache("serving", cache)
     return _SERVING
 
 
@@ -423,19 +467,21 @@ def serving_fault_cells(workers: int | None = None) -> list:
     """The (memoized) fault-composed serving block: ``degraded_link`` firing
     under the diurnal pattern's peak on the coherent platform, both
     oversubscribed KV regimes, every registry variant."""
-    global _SERVING_FAULTS, LAST_SWEEP_WORKERS
+    global _SERVING_FAULTS
     if _SERVING_FAULTS is None:
         from repro.umbench.serving import run_serving_specs, serving_specs
         specs = serving_specs((SERVING_FAULT_PATTERN,), ("p9-volta-nvlink",),
                               ("kv_150", "kv_200"),
                               faults=SERVING_FAULT_SCENARIO)
-        LAST_SWEEP_WORKERS = workers or default_workers()
         journal = _journal("serving_faults")
+        cache = _cache("serving_faults")
         try:
             _SERVING_FAULTS = run_serving_specs(
-                specs, workers=LAST_SWEEP_WORKERS, journal=journal)
+                specs, workers=_used_workers("serving_faults", workers),
+                journal=journal, cache=cache)
         finally:
             _close_journal("serving_faults", journal)
+            _close_cache("serving_faults", cache)
     return _SERVING_FAULTS
 
 

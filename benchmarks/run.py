@@ -31,6 +31,12 @@ The pooled sweeps journal every completed cell to ``.umbench_journal/``
 from the journals of a previous interrupted run and re-runs only the
 rest; without it, stale journals are truncated.  The journal directory is
 removed after a fully successful run.
+
+The pooled sweeps also consult the content-addressed cell cache in
+``.umbench_cellcache/`` (DESIGN.md §15): a cell whose workload trace,
+strategy, axes, and engine code revision all match a cached record is
+replayed instead of re-simulated, so a warm re-run takes seconds.  The
+artifact stores the per-block hit/keyed-miss tally under ``cache_report``.
 """
 from __future__ import annotations
 
@@ -46,8 +52,15 @@ import time
 # in BENCH_umbench.json instead of re-running the seed oracle.
 SEED_BASELINE_MATRIX_240_S = 58.8
 
+# Wall-clock of the pre-batching per-cell engine on the full 1152-cell page
+# matrix (the PR-8 committed artifact's page_matrix_wall_s).  The batched
+# engine's CI gate is the same seed/3 rule the 240-cell matrix uses; future
+# PRs track page_matrix_wall_s in BENCH_umbench.json against it.
+SEED_BASELINE_PAGE_MATRIX_S = 869.2
+
 BENCH_PATH = "BENCH_umbench.json"
 JOURNAL_DIR = ".umbench_journal"
+CACHE_DIR = ".umbench_cellcache"
 
 
 # the cell-identity axes, in key order; new_axis_values labels fresh axis
@@ -72,7 +85,8 @@ def _cell_key(row) -> tuple | None:
     return key
 
 
-def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
+def cell_deltas(prev_cells: list[dict], cells: list[dict],
+                cached_keys=()) -> dict:
     """Per-cell simulated-total deltas vs the previous artifact.  Cells are
     matched on (app, platform, variant, regime, granularity); only changed
     cells are listed (sorted by |delta|, worst first) so an unchanged sweep
@@ -91,7 +105,14 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
     with ``cells_error`` counting them, on either side of the diff — a
     current error cell is not "changed" (its None total vs a number is a
     failure, not a perf delta) and a prior error cell that vanished is not
-    "removed" (coverage did not shrink; a failure stopped recurring)."""
+    "removed" (coverage did not shrink; a failure stopped recurring).
+
+    ``cached_keys`` names cells answered by the content-addressed cell
+    cache (5-field key tuples).  A cache hit is by construction the same
+    bits a re-run would produce — it can never be a perf delta, so those
+    cells are compared but never listed as changed (a divergence there
+    would mean the *predecessor artifact*, not this sweep, was produced by
+    different code)."""
     prev = {}
     prev_err: set = set()
     for r in prev_cells:
@@ -127,7 +148,7 @@ def cell_deltas(prev_cells: list[dict], cells: list[dict]) -> dict:
             continue
         compared += 1
         old, new = prev[key], row.get("total_s")
-        if old == new:
+        if old == new or key in cached_keys:
             continue
         delta = {"cell": list(key), "prev_total_s": old, "total_s": new}
         if old and new is not None:
@@ -160,6 +181,11 @@ def main() -> None:
     # crash-safe sweeps (§12): every pooled sweep checkpoints per-cell;
     # --resume replays completed cells of an interrupted previous run
     paper_tables.configure_journals(JOURNAL_DIR, resume=resume)
+    # content-addressed cell cache (§15): unlike the journals it survives
+    # successful runs, so a re-run only recomputes cells whose workload,
+    # strategy, axes, or engine code actually changed
+    if not fast:
+        paper_tables.configure_cache(CACHE_DIR)
 
     timings: dict[str, float] = {}
     blocks: list[list[str]] = []
@@ -203,11 +229,6 @@ def main() -> None:
                     prev = json.load(f)
             except (OSError, ValueError):
                 prev = None
-        # the extended and page sweeps (already memoized by the ext/page
-        # blocks above) fanned out over default_workers() processes; the
-        # seed 240-cell matrix stays serial (it IS the wall-clock gate).
-        # Record the pool those sweeps REALLY used — the pre-fix artifact
-        # recorded 1 while run_matrix's pool sat unused.
         cells = paper_tables.matrix_cells(extended=not fast)
         if not fast:
             # clean serving cells only: the fault-composed block shares the
@@ -216,8 +237,13 @@ def main() -> None:
             # row per key
             cells = (cells + paper_tables.page_cells()
                      + paper_tables.serving_cells())
-        sweep_workers = (paper_tables.LAST_SWEEP_WORKERS or 1) if not fast \
-            else 1
+        # the pool each pooled sweep REALLY used, recorded per sweep by
+        # paper_tables._used_workers as the pool was sized — the pre-fix
+        # artifact hardcoded the last sweep's value (and before that, 1,
+        # while run_specs pooled via default_workers()).  The seed 240-cell
+        # matrix stays serial (it IS the wall-clock gate) and is excluded.
+        sweep_workers = (max(paper_tables.SWEEP_WORKERS_USED.values())
+                         if paper_tables.SWEEP_WORKERS_USED else 1)
         rows = [c.row() for c in cells]
         payload = {
             "matrix_240_wall_s": round(matrix_wall, 3),
@@ -225,18 +251,33 @@ def main() -> None:
             "speedup_vs_seed": round(SEED_BASELINE_MATRIX_240_S
                                      / max(matrix_wall, 1e-9), 1),
             "sweep_workers": sweep_workers,
+            # per-sweep pool sizes as actually used (sweep_workers above is
+            # their max; the unit test over the committed artifact pins the
+            # relationship)
+            "sweep_workers_used": dict(paper_tables.SWEEP_WORKERS_USED),
             "block_wall_s": timings,
             # the full-matrix page-granularity sweep's wall clock, tracked
             # PR-over-PR like matrix_240_wall_s (absent in --fast runs)
             **({"page_matrix_wall_s": timings.get("page")} if not fast
                else {}),
             "n_cells": len(cells),
+            # sweep bookkeeping, side by side: cells replayed from crash
+            # journals, and the cell cache's hit/keyed-miss tally per block
+            "journal_stats": {k: {"reused": r, "ran": n}
+                              for k, (r, n)
+                              in paper_tables.JOURNAL_STATS.items()},
+            "cache_report": paper_tables.CACHE_STATS,
             "cells": rows,
         }
+        # clean (faults=None) cache-hit cells, projected onto the 5-field
+        # BENCH key: by construction bit-identical to a re-run, so never
+        # "changed" in the diff below
+        cached = {k[:5] for k in paper_tables.CACHE_HIT_KEYS if k[5] is None}
         if prev is not None:
             payload["vs_prev"] = {
                 "prev_matrix_240_wall_s": prev.get("matrix_240_wall_s"),
-                **cell_deltas(prev.get("cells", []), rows),
+                **cell_deltas(prev.get("cells", []), rows,
+                              cached_keys=cached),
             }
         # temp file + atomic rename: a crash mid-dump leaves the previous
         # artifact intact instead of a torn BENCH_umbench.json
@@ -257,7 +298,15 @@ def main() -> None:
         stats = ", ".join(f"{k}: {r} reused/{n} ran"
                           for k, (r, n) in paper_tables.JOURNAL_STATS.items())
         print(f"sweep journals ({JOURNAL_DIR}): {stats}")
-    # everything completed: the checkpoints have served their purpose
+    if paper_tables.CACHE_STATS:
+        rep = ", ".join(
+            f"{k}: {v['hits']} hits/"
+            + "+".join(f"{n} {reason}" for reason, n in v["misses"].items())
+            for k, v in paper_tables.CACHE_STATS.items())
+        print(f"cell cache ({CACHE_DIR}): {rep}")
+    # everything completed: the checkpoints have served their purpose (the
+    # cell cache, unlike the journals, persists — it keys on content, not
+    # on an interrupted run)
     shutil.rmtree(JOURNAL_DIR, ignore_errors=True)
 
 

@@ -274,6 +274,30 @@ class RunQueue:
         else:                                                   # scattered
             self.nlive[e] = nl - cnt
 
+    def front(self, regions):
+        """``(reg, chunk_id)`` of this queue's pop-front live chunk — the
+        lowest-stamp chunk it holds (queue order IS stamp order, the
+        audited ``stamp_order`` invariant) — or None when empty.  Advances
+        the dead-head scan as a side effect.  Within an entry the live
+        chunk with the smallest id carries the smallest stamp: entries are
+        appended as ascending contiguous runs with ascending stamps, and
+        tail merges only ever extend an entry upward in both id and
+        stamp."""
+        h, t = self.head, self.tail
+        nlv = self.nlive
+        while h < t and nlv[h] == 0:
+            h += 1
+        self.head = h
+        if h >= t:
+            return None
+        rg = int(self.reg[h])
+        s = int(self.start[h])
+        ln = int(self.length[h])
+        if int(nlv[h]) == ln:
+            return rg, s
+        win = regions[rg].entry_ptr[s:s + ln]
+        return rg, s + int(np.argmax(win == h * 2 + self.qi))
+
     # -- gather ----------------------------------------------------------------
     def live_runs(self, regions):
         """Materialize the queue's pop order as runs: parallel arrays
@@ -341,23 +365,86 @@ class ResidencyIndex:
                 np.concatenate([uc, pc]), np.concatenate([uz, pz]),
                 len(ur))
 
+    def remove_runs(self, regions, regs, starts, cnts) -> None:
+        """Batched un-filing of victim runs (the hot eviction path).
+
+        Each run came off :meth:`pop_runs`, so it lives entirely inside one
+        queue entry (``live_runs`` never crosses entry boundaries): per run
+        this is O(1) bookkeeping plus one ``entry_ptr`` slice clear, with the
+        run-window shrink rules of :meth:`RunQueue.remove`.  Live counters
+        and the dead-head scan are settled once per queue at the end instead
+        of per removal — batch run replacement, not per-entry Python."""
+        touched = [False, False]
+        rm_chunks = [0, 0]
+        rm_bytes = [0, 0]
+        for k in range(len(regs)):
+            r = regions[int(regs[k])]
+            s, c = int(starts[k]), int(cnts[k])
+            e0 = int(r.entry_ptr[s])
+            r.entry_ptr[s:s + c] = -1
+            qi = e0 & 1
+            e = e0 >> 1
+            q = self.pin if qi else self.un
+            nl = int(q.nlive[e])
+            ln = int(q.length[e])
+            if c == nl:
+                q.nlive[e] = 0
+            elif nl == ln and int(q.start[e]) == s:              # prefix
+                q.start[e] = s + c
+                q.length[e] = ln - c
+                q.nlive[e] = nl - c
+            elif nl == ln and s + c == int(q.start[e]) + ln:     # suffix
+                q.length[e] = ln - c
+                q.nlive[e] = nl - c
+            else:                                                # scattered
+                q.nlive[e] = nl - c
+            rm_chunks[qi] += c
+            rm_bytes[qi] += c * int(q.csize[e])
+            r.q_live[qi] -= c
+            touched[qi] = True
+        for qi in (0, 1):
+            if not touched[qi]:
+                continue
+            q = self.pin if qi else self.un
+            q.live_chunks -= rm_chunks[qi]
+            q.live_bytes -= rm_bytes[qi]
+            h, t, nlv = q.head, q.tail, q.nlive
+            while h < t and nlv[h] == 0:
+                h += 1
+            q.head = h
+
 
 def chunk_runs(ids: np.ndarray, sizes: np.ndarray):
     """Split ``ids`` (in insertion order) into maximal runs of consecutive
     ascending chunk ids with uniform chunk size.  ``sizes`` is the per-chunk
-    size array aligned with ``ids``.  Within ``ids`` each maximal ascending
-    stretch must be sorted (every producer walks chunks in ascending or
-    wrapped-ascending order).  Returns (starts, lengths, csizes)."""
+    size array aligned with ``ids``, drawn from one region's size array —
+    uniform chunks with at most one odd FINAL chunk (the allocation
+    invariant the fast paths below rely on).  Within ``ids`` each maximal
+    ascending stretch must be sorted (every producer walks chunks in
+    ascending or wrapped-ascending order).  Returns (starts, lengths,
+    csizes)."""
     n = len(ids)
     if not n:
         z = np.zeros(0, dtype=np.int64)
         return z, z, z
-    if n == 1 or (int(ids[-1]) - int(ids[0]) == n - 1
-                  and sizes[0] == sizes[-1] and (sizes == sizes[0]).all()):
-        # fast path: one contiguous uniform run (the common case)
+    if n == 1:
         return (np.array([ids[0]], dtype=np.int64),
-                np.array([n], dtype=np.int64),
+                np.array([1], dtype=np.int64),
                 np.array([sizes[0]], dtype=np.int64))
+    if int(ids[-1]) - int(ids[0]) == n - 1 and sizes[0] == sizes[n - 2]:
+        # contiguous ascending window of one region: sizes comes from the
+        # region's per-chunk size array, where only the FINAL chunk may
+        # differ from the uniform chunk size (the allocation invariant) —
+        # so the second-to-last element witnesses body uniformity and the
+        # only possible break is before the last element.  No full-array
+        # scan or diff on the hot megachunk paths.
+        if sizes[n - 1] == sizes[0]:
+            return (np.array([ids[0]], dtype=np.int64),
+                    np.array([n], dtype=np.int64),
+                    np.array([sizes[0]], dtype=np.int64))
+        return (np.array([ids[0], int(ids[0]) + n - 1], dtype=np.int64),
+                np.array([n - 1, 1], dtype=np.int64),
+                np.array([sizes[0], sizes[n - 1]], dtype=np.int64))
     brk = np.flatnonzero((np.diff(ids) != 1) | (np.diff(sizes) != 0)) + 1
     bounds = np.concatenate([[0], brk, [len(ids)]])
     starts = ids[bounds[:-1]]

@@ -165,8 +165,16 @@ class Region:
         rem = self.nbytes - (n - 1) * self.chunk_bytes
         sizes[-1] = rem if rem > 0 else self.chunk_bytes
         self.sizes = sizes
+        self.bytes_total = int(sizes.sum())
+        # cached arange(nchunks) — every full (non-partial) kernel touch of
+        # this region reuses it instead of re-allocating a megachunk array
+        self.all_ids: np.ndarray | None = None
         self.on_device = np.zeros(n, dtype=bool)
         self.duplicated = np.zeros(n, dtype=bool)
+        # monotone flag: False guarantees ``duplicated`` is all-False, so
+        # the eviction paths skip their per-victim duplicated-flag scans
+        # entirely for regions that never held a read-mostly duplicate
+        self.dup_ever = False
         self.populated = np.zeros(n, dtype=bool)
         self.arrival = np.zeros(n, dtype=np.float64)
         self.stamp = np.zeros(n, dtype=np.int64)
@@ -325,6 +333,14 @@ class UMSimulator:
         self.t_copy = 0.0            # copy stream clock
         self.device_used = 0         # bytes resident on device
         self._clock = 0              # residency-order stamp source
+        # cached ramp buffers (grown on demand): 0-based/1-based int64 and
+        # float64 aranges the megachunk hot paths slice instead of
+        # re-allocating an arange per fault batch / bulk copy / stamp write
+        self._ramp_cap = 0
+        self._ramp_i0 = None
+        self._ramp_i1 = None
+        self._ramp_f0 = None
+        self._ramp_f1 = None
         self._rlist: list[Region] = []      # regions in allocation order
         self._index = ResidencyIndex()      # run-coalesced residency queues
         # set once eviction has happened: the memory-pressure regime in which
@@ -451,12 +467,26 @@ class UMSimulator:
             return
         r.preferred = None
         if r.q_live[1]:
-            ids = np.nonzero(r.in_pin_queue & (r.entry_ptr >= 0))[0]
-            ids = ids[np.argsort(r.stamp[ids], kind="stable")]
-            self._index_remove(r, ids)
+            # the region's live pinned chunks in stamp order, read off the
+            # pin queue directly: entries are in stamp order and within an
+            # entry ascending id IS ascending stamp (see RunQueue.front) —
+            # no per-chunk stamp argsort
+            q = self._index.pin
+            parts = []
+            for e in range(q.head, q.tail):
+                if int(q.nlive[e]) == 0 or int(q.reg[e]) != r.slot:
+                    continue
+                s, ln = int(q.start[e]), int(q.length[e])
+                if int(q.nlive[e]) == ln:
+                    parts.append(np.arange(s, s + ln, dtype=np.int64))
+                else:
+                    win = r.entry_ptr[s:s + ln]
+                    parts.append(s + np.nonzero(win == e * 2 + 1)[0])
+            ids = np.concatenate(parts)     # q_live[1] > 0: never empty
+            self._index_remove(r, ids, clear=False)
             r.in_pin_queue[ids] = False
-            r.stamp[ids] = self._stamps(len(ids))
-            self._index_append(r, ids)
+            self._stamp_ids(r, ids)
+            self._index_append(r, ids, qi=0)
         self._audited("unadvise_preferred_location", name)
 
     def enable_access_counters(self, name: str, threshold: float) -> None:
@@ -483,9 +513,65 @@ class UMSimulator:
         self._clock += n
         return s
 
-    def _index_append(self, r: Region, ids: np.ndarray) -> None:
+    def _ramps(self, n: int) -> None:
+        """Ensure the cached ramp buffers cover ``n`` elements.  The views
+        ``_ramp_i0[:n]``/``_ramp_i1[:n]`` hold 0..n-1 / 1..n (int64) and
+        ``_ramp_f0``/``_ramp_f1`` their float64 twins — read-only by
+        convention; consumers multiply/add them into fresh or out= arrays."""
+        if n <= self._ramp_cap:
+            return
+        cap = max(2 * self._ramp_cap, n)
+        self._ramp_i0 = np.arange(cap, dtype=np.int64)
+        self._ramp_i1 = self._ramp_i0 + 1
+        self._ramp_f0 = self._ramp_i0.astype(np.float64)
+        self._ramp_f1 = self._ramp_i1.astype(np.float64)
+        self._ramp_cap = cap
+
+    def _stamp_run(self, r: Region, s0: int, n: int) -> None:
+        """Stamp the contiguous run ``[s0, s0+n)`` with the next ``n`` clock
+        values in one fused pass (no arange allocation + copy).
+
+        Stamps are *audit-only* state: every engine reader of pop order
+        (the run planner, the scalar anomaly path, the pinned-queue
+        re-sort) reads queue order, which IS stamp order — so with the
+        audit off the per-chunk write (8 bytes x millions of pages per
+        insert) is skipped and only the clock advances, keeping audit-on
+        stamps bit-identical to what they always were."""
+        if self._audit is not None:
+            self._ramps(n)
+            np.add(self._ramp_i0[:n], self._clock, out=r.stamp[s0:s0 + n])
+        self._clock += n
+
+    def _stamp_ids(self, r: Region, ids: np.ndarray) -> None:
+        """Gathered-id counterpart of :meth:`_stamp_run` (audit-only write,
+        clock always advances)."""
+        if self._audit is not None:
+            r.stamp[ids] = self._stamps(len(ids))
+        else:
+            self._clock += len(ids)
+
+    def _index_append(self, r: Region, ids: np.ndarray,
+                      qi: int | None = None) -> None:
         """File ``ids`` (already stamped, ``in_pin_queue`` set) at the tail
-        of their queue as coalesced runs, in ``ids`` order."""
+        of their queue as coalesced runs, in ``ids`` order.  Callers that
+        just wrote a uniform ``in_pin_queue`` value pass ``qi`` so the
+        single-queue membership check never re-scans the window."""
+        n = len(ids)
+        s0 = int(ids[0])
+        contig = n == 1 or int(ids[-1]) - s0 == n - 1
+        if qi is None and contig \
+                and bool((r.in_pin_queue[s0:s0 + n]
+                          == r.in_pin_queue[s0]).all()):
+            qi = 1 if r.in_pin_queue[s0] else 0
+        if qi is not None:
+            # single-queue batch: slice views instead of fancy gathers (the
+            # hot page-granularity fault/insert path)
+            starts, lengths, csizes = chunk_runs(
+                ids, r.sizes[s0:s0 + n] if contig else r.sizes[ids])
+            self._index.queue(qi).append(r.slot, starts, lengths, csizes,
+                                         self._rlist)
+            r.q_live[qi] += n
+            return
         pinq = r.in_pin_queue[ids]
         for qi in (0, 1):
             sub = ids[pinq] if qi else ids[~pinq]
@@ -496,20 +582,57 @@ class UMSimulator:
                                          self._rlist)
             r.q_live[qi] += len(sub)
 
-    def _index_remove(self, r: Region, ids: np.ndarray) -> None:
-        """Un-file ``ids`` from their queue entries (lazy run shrink)."""
-        enc = r.entry_ptr[ids]
-        r.entry_ptr[ids] = -1
+    def _one_entry(self, r: Region, ids: np.ndarray) -> int:
+        """Entry code shared by every chunk of ``ids``, or -1.  For an
+        ascending contiguous batch whose candidate entry is fully live the
+        check is O(1) — matching endpoints inside a fully-live window imply
+        the whole batch is filed there — so the hot per-kernel re-touch of a
+        megachunk region never gathers ``entry_ptr``."""
         n = len(ids)
-        e0 = int(enc[0])
-        if n == 1 or (e0 == enc[-1] and (enc == e0).all()):
+        s0 = int(ids[0])
+        e0 = int(r.entry_ptr[s0])
+        if n == 1:
+            return e0
+        if int(ids[-1]) - s0 == n - 1:
+            if int(r.entry_ptr[s0 + n - 1]) != e0:
+                return -1
+            if e0 >= 0:
+                q = self._index.queue(e0 & 1)
+                if int(q.nlive[e0 >> 1]) == int(q.length[e0 >> 1]):
+                    return e0
+            return e0 if bool((r.entry_ptr[s0:s0 + n] == e0).all()) else -1
+        enc = r.entry_ptr[ids]
+        if e0 == int(enc[-1]) and (enc == e0).all():
+            return e0
+        return -1
+
+    def _index_remove(self, r: Region, ids: np.ndarray,
+                      clear: bool = True) -> None:
+        """Un-file ``ids`` from their queue entries (lazy run shrink).
+        ``clear=False`` skips the ``entry_ptr`` invalidation pass — only
+        for callers that immediately re-file the exact same ids (the
+        append overwrites every cleared slot anyway)."""
+        n = len(ids)
+        e0 = self._one_entry(r, ids)
+        if e0 >= 0:
             # fast path: one entry covers the whole batch (the common case —
             # batches are runs, runs live in one entry)
+            if int(ids[-1]) - int(ids[0]) == n - 1:
+                s0 = int(ids[0])
+                if clear:
+                    r.entry_ptr[s0:s0 + n] = -1
+                lo, hi = s0, s0 + n - 1
+            else:
+                if clear:
+                    r.entry_ptr[ids] = -1
+                lo, hi = int(ids.min()), int(ids.max())
             qi = e0 & 1
-            self._index.queue(qi).remove(e0 >> 1, n, int(ids.min()),
-                                         int(ids.max()))
+            self._index.queue(qi).remove(e0 >> 1, n, lo, hi)
             r.q_live[qi] -= n
             return
+        enc = r.entry_ptr[ids]
+        if clear:
+            r.entry_ptr[ids] = -1
         order = np.argsort(enc, kind="stable")
         enc_s = enc[order]
         ids_s = ids[order]
@@ -568,7 +691,10 @@ class UMSimulator:
             c = int(cnts[k])
             r = self._rlist[int(regs[k])]
             s = int(starts[k])
-            dups[pos:pos + c] = r.duplicated[s:s + c]
+            if r.dup_ever:
+                dups[pos:pos + c] = r.duplicated[s:s + c]
+            else:
+                dups[pos:pos + c] = False
             pos += c
         return reg_ids, chunk_ids, sizes, dups
 
@@ -579,22 +705,50 @@ class UMSimulator:
         assigned in ``ids`` order — exactly the seed's insertion order — and
         the chunks are filed at the tail of their residency queue.
         """
-        self.device_used += int(r.sizes[ids].sum())
-        r.stamp[ids] = self._stamps(len(ids))
-        r.in_pin_queue[ids] = r.preferred is MemorySpace.DEVICE
-        dup = np.broadcast_to(np.asarray(duplicate, dtype=bool), (len(ids),))
-        r.duplicated[ids[dup]] = True
-        r.on_device[ids[~dup]] = True
-        self._index_append(r, ids)
+        n = len(ids)
+        s0 = int(ids[0])
+        # contiguous batches (every fault/copy run) write through slices —
+        # no index-array gathers on the megachunk page-granularity path
+        contig = int(ids[-1]) - s0 == n - 1
+        sl = slice(s0, s0 + n) if contig else ids
+        csz = int(r.sizes[s0])
+        if contig and (n < 2 or int(r.sizes[s0 + n - 2]) == csz):
+            # uniform run (odd tail at most): byte total is scalar
+            self.device_used += (n - 1) * csz + int(r.sizes[s0 + n - 1])
+        else:
+            self.device_used += int(r.sizes[sl].sum())
+        if contig:
+            self._stamp_run(r, s0, n)
+        else:
+            self._stamp_ids(r, ids)
+        pinned = r.preferred is MemorySpace.DEVICE
+        r.in_pin_queue[sl] = pinned
+        dup = np.asarray(duplicate, dtype=bool)
+        if dup.ndim == 0:
+            if bool(dup):
+                r.duplicated[sl] = True
+                r.dup_ever = True
+            else:
+                r.on_device[sl] = True
+        elif contig:
+            r.duplicated[sl] |= dup
+            r.on_device[sl] |= ~dup
+            if not r.dup_ever and bool(dup.any()):
+                r.dup_ever = True
+        else:
+            r.duplicated[ids[dup]] = True
+            r.on_device[ids[~dup]] = True
+            if not r.dup_ever and bool(dup.any()):
+                r.dup_ever = True
+        self._index_append(r, ids, qi=1 if pinned else 0)
 
     def _touch(self, r: Region, ids: np.ndarray) -> None:
         """Move touched chunks to the back of their queue (seed move_to_end):
         re-stamping preserves relative order within each queue, and the
         index entries are re-filed at the tail of the same queue."""
         n = len(ids)
-        enc = r.entry_ptr[ids]
-        e0 = int(enc[0])
-        if n == 1 or (e0 == enc[-1] and (enc == e0).all()):
+        e0 = self._one_entry(r, ids)
+        if e0 >= 0:
             q = self._index.queue(e0 & 1)
             e = e0 >> 1
             if (e == q.tail - 1 and int(q.nlive[e]) == n
@@ -608,37 +762,13 @@ class UMSimulator:
                 # touch (partial kernel whose cursor sits mid-entry) falls
                 # through and re-files in touch order, as the seed does.
                 return
-        r.stamp[ids] = self._stamps(n)
-        self._index_remove(r, ids)
+        s0 = int(ids[0])
+        if int(ids[-1]) - s0 == n - 1:
+            self._stamp_run(r, s0, n)
+        else:
+            self._stamp_ids(r, ids)
+        self._index_remove(r, ids, clear=False)
         self._index_append(r, ids)
-
-    def _gather_resident_scalar(self):
-        """Concatenate (region, chunk, stamp, size, dup, in_pin, pinned_now)
-        over all device-resident chunks — a full rebuild of the residency
-        queues from per-chunk state.  Only the scalar anomaly path uses
-        this; every hot path reads the incremental ``_index`` instead
-        (DESIGN.md §9 has the migration note for the old
-        ``_gather_resident``)."""
-        rlist = []
-        regs, idxs, stamps, sizes, dups, pinq, pnow = [], [], [], [], [], [], []
-        for r in self.regions.values():
-            ids = np.nonzero(r.resident_mask())[0]
-            if not len(ids):
-                continue
-            regs.append(np.full(len(ids), len(rlist), dtype=np.int64))
-            rlist.append(r)
-            idxs.append(ids)
-            stamps.append(r.stamp[ids])
-            sizes.append(r.sizes[ids])
-            dups.append(r.duplicated[ids])
-            pinq.append(r.in_pin_queue[ids])
-            pnow.append(np.full(len(ids), r.preferred is MemorySpace.DEVICE))
-        if not idxs:
-            return None
-        return (rlist, np.concatenate(regs), np.concatenate(idxs),
-                np.concatenate(stamps), np.concatenate(sizes),
-                np.concatenate(dups), np.concatenate(pinq),
-                np.concatenate(pnow))
 
     def residency_snapshot(self) -> list[tuple[str, int]]:
         """(region name, chunk) pairs in queue-filed pop order — the
@@ -681,9 +811,8 @@ class UMSimulator:
         self.report.n_evictions += n
         ndrop = int(dups.sum())
         self.report.n_dropped += ndrop
-        mig = ~dups
-        if mig.any():
-            msz = sizes[mig]
+        if ndrop < n:
+            msz = sizes if ndrop == 0 else sizes[~dups]
             t = float((msz / (self.p.link_bw_gbs * GB)).sum())
             if self._inj is not None:
                 scale, backoff = self._inj.transfer(t)
@@ -702,11 +831,60 @@ class UMSimulator:
         for ri, sel in groups:
             r = rlist[ri]
             ids = chunk_ids[sel]
-            d = dups[sel]
             self._index_remove(r, ids)
-            r.duplicated[ids[d]] = False       # free drop (host copy valid)
-            r.on_device[ids[~d]] = False       # migrated back to host
+            if ndrop == 0:
+                r.on_device[ids] = False       # migrated back to host
+            elif ndrop == n:
+                r.duplicated[ids] = False      # free drop (host copy valid)
+            else:
+                d = dups[sel]
+                r.duplicated[ids[d]] = False
+                r.on_device[ids[~d]] = False
             self._pf_clear(r, ids)
+
+    def _apply_eviction_runs(self, rlist, regs, starts, cnts, csz) -> None:
+        """Run-level :meth:`_apply_evictions`: same state + accounting, but
+        every per-victim effect is computed per run with slice reads/writes
+        — no per-chunk expansion ever happens on this path (the hot
+        page-granularity eviction path; integer counters stay exact because
+        run chunk sizes are uniform, transfer seconds agree with the
+        per-chunk sum to float rounding, inside the parity contract)."""
+        n = int(cnts.sum())
+        if not n:
+            return
+        self.device_used -= int((cnts * csz).sum())
+        self.report.n_evictions += n
+        bw = self.p.link_bw_gbs * GB
+        t = 0.0
+        mig_bytes = 0
+        drops: list[tuple[Region, int, int]] = []
+        for k in range(len(regs)):
+            r = rlist[int(regs[k])]
+            s, c = int(starts[k]), int(cnts[k])
+            k_drop = int(r.duplicated[s:s + c].sum()) if r.dup_ever else 0
+            if k_drop:
+                self.report.n_dropped += k_drop
+            mig = c - k_drop
+            if mig:
+                mb = mig * int(csz[k])
+                mig_bytes += mb
+                t += mb / bw
+            drops.append((r, s, c))
+        if mig_bytes:
+            if self._inj is not None:
+                scale, backoff = self._inj.transfer(t)
+                t *= scale
+                self.t_device += backoff
+            self.report.dtoh_s += t
+            self.report.dtoh_bytes += mig_bytes
+            self.t_device += t
+        self._index.remove_runs(rlist, regs, starts, cnts)
+        for r, s, c in drops:
+            if r.dup_ever:
+                r.duplicated[s:s + c] = False  # free drop (host copy valid)
+            r.on_device[s:s + c] = False       # migrated back to host
+            if r.pf_mark is not None:
+                r.pf_mark[s:s + c] = False
 
     def _evict_for(self, need: int) -> None:
         """Evict least-recently-resident chunks until `need` bytes fit.
@@ -735,43 +913,49 @@ class UMSimulator:
         rcum = np.cumsum(cnts * csz)
         if int(rcum[-1]) < need_free:
             # over-drain: the seed pops *everything*, then raises
-            self._apply_evictions(self._rlist,
-                                  *self._expand_victims(regs, starts, cnts, csz))
+            self._apply_eviction_runs(self._rlist, regs, starts, cnts, csz)
             raise OversubscriptionError(f"cannot free {need} bytes")
         j = int(np.searchsorted(rcum, need_free, side="left"))
         prev = int(rcum[j - 1]) if j else 0
         within = -((prev - need_free) // int(csz[j]))   # ceil, >= 1
-        upto = int(cnts[:j].sum()) + within
-        self._apply_evictions(
-            self._rlist, *self._expand_victims(regs, starts, cnts, csz,
-                                               upto=upto))
+        t_cnts = cnts[:j + 1].copy()
+        t_cnts[j] = within
+        self._apply_eviction_runs(self._rlist, regs[:j + 1], starts[:j + 1],
+                                  t_cnts, csz[:j + 1])
 
     def _evict_for_scalar(self, need: int) -> None:
         """Pop-by-pop eviction replicating the seed's lazy queue
         reclassification (a region's pin advise changed after its chunks
         were filed).  Only reached when the per-region queue counters flag
-        an anomaly; rebuilds the queues from chunk state per pop."""
+        an anomaly.  The victim comes straight off the index queues —
+        queue order IS stamp order (the audited ``stamp_order``
+        invariant), so the front of the unpinned queue (then the pinned
+        one) is exactly the seed's argmin-stamp pop, with no per-chunk
+        stamp gather."""
         while self.device_used + need > self.device_capacity:
-            g = self._gather_resident_scalar()
-            if g is None:
+            qi = 0
+            f = self._index.un.front(self._rlist)
+            if f is None:
+                qi = 1
+                f = self._index.pin.front(self._rlist)
+            if f is None:
                 raise OversubscriptionError(f"cannot free {need} bytes")
-            rlist, regs, idxs, stamps, sizes, dups, pinq, pnow = g
-            un = np.nonzero(~pinq)[0]
-            if len(un):
-                j = un[np.argmin(stamps[un])]
-                r = rlist[regs[j]]
-                if pnow[j]:                  # advise changed since insert
-                    self._refile(r, int(idxs[j]), pinned=True)
-                    continue
-            else:
-                pin = np.nonzero(pinq)[0]
-                j = pin[np.argmin(stamps[pin])]
-                r = rlist[regs[j]]
-                if not pnow[j]:              # un-pinned since insert
-                    self._refile(r, int(idxs[j]), pinned=False)
-                    continue
-            self._apply_evictions(rlist, regs[j:j + 1], idxs[j:j + 1],
-                                  sizes[j:j + 1], dups[j:j + 1])
+            rg, idx = f
+            r = self._rlist[rg]
+            pnow = r.preferred is MemorySpace.DEVICE
+            if qi == 0 and pnow:             # advise changed since insert
+                self._refile(r, idx, pinned=True)
+                continue
+            if qi == 1 and not pnow:         # un-pinned since insert
+                self._refile(r, idx, pinned=False)
+                continue
+            dup = (np.array([bool(r.duplicated[idx])])
+                   if r.dup_ever else np.zeros(1, dtype=bool))
+            self._apply_evictions(self._rlist,
+                                  np.array([rg], dtype=np.int64),
+                                  np.array([idx], dtype=np.int64),
+                                  np.array([int(r.sizes[idx])],
+                                           dtype=np.int64), dup)
 
     def _refile(self, r: Region, idx: int, *, pinned: bool) -> None:
         """Move one chunk to the tail of the other queue (the seed's lazy
@@ -779,8 +963,8 @@ class UMSimulator:
         one = np.array([idx])
         self._index_remove(r, one)
         r.in_pin_queue[idx] = pinned
-        r.stamp[idx] = self._stamps(1)[0]
-        self._index_append(r, one)
+        self._stamp_ids(r, one)
+        self._index_append(r, one, qi=1 if pinned else 0)
 
     # -- fault-event coalescing -------------------------------------------------
     def _n_fault_events(self, r: Region, ids: np.ndarray) -> int:
@@ -791,6 +975,14 @@ class UMSimulator:
         bypasses this helper entirely (one fault per page: Fig. 7c/8c)."""
         if self.granularity == "group" or r.chunk_bytes >= self.p.fault_group_bytes:
             return len(ids)
+        n = len(ids)
+        i0, iN = int(ids[0]), int(ids[-1])
+        if iN - i0 == n - 1:
+            # contiguous run: consecutive chunks step the group id by 0 or 1
+            # (chunk < group), so every group in [g(i0), g(iN)] is hit —
+            # closed form, no np.unique over a megachunk id array
+            cb, fg = r.chunk_bytes, self.p.fault_group_bytes
+            return int((iN * cb) // fg - (i0 * cb) // fg) + 1
         groups = (ids.astype(np.int64) * r.chunk_bytes) // self.p.fault_group_bytes
         return len(np.unique(groups))
 
@@ -836,7 +1028,7 @@ class UMSimulator:
         self._insert_resident(r, one, duplicate=duplicate)
 
     def _plan_victims(self, r: Region, ids: np.ndarray, need: np.ndarray,
-                      own_dup: np.ndarray):
+                      own_dup: np.ndarray, want_m: bool = True):
         """Victim plan for inserting the batch ``ids`` into ``r``.
 
         ``need[i]`` is the byte deficit before chunk i's insertion.  Returns
@@ -863,37 +1055,84 @@ class UMSimulator:
             q_regs, q_starts, q_cnts, q_csz, n_un_runs = z, z, z, z, 0
         else:
             q_regs, q_starts, q_cnts, q_csz, n_un_runs = pop
-        sizes = r.sizes[ids]
         n_own = len(ids)
         need_total = int(need[-1])
         un_bytes = self._index.un.live_bytes
         old_bytes = un_bytes + self._index.pin.live_bytes
         if need_total <= un_bytes or (region_pinned and need_total <= old_bytes):
             # pure old-queue prefix: no own-batch chunk can be popped before
-            # the deficit is covered.  Only the runs covering the deficit
-            # are ever expanded to chunks.
+            # the deficit is covered.  The victim set stays RUN-LEVEL — the
+            # boundary run is cut at the exact victim count (runs are
+            # size-uniform) and _apply_eviction_runs applies it with slice
+            # arithmetic; per-chunk expansion happens only when the evicting
+            # bulk copy needs non-uniform/duplicate write-back pricing.
             rcum = np.cumsum(q_cnts * q_csz)
             j = int(np.searchsorted(rcum, need_total, side="left"))
-            o_regs, o_idxs, o_sizes, o_dups = self._expand_victims(
-                q_regs[:j + 1], q_starts[:j + 1], q_cnts[:j + 1],
-                q_csz[:j + 1])
-            vcum = np.cumsum(o_sizes)
-            m = np.where(need > 0,
-                         np.searchsorted(vcum, np.maximum(need, 0),
-                                         side="left") + 1,
-                         0)
-            M = int(m[-1])
-            return {
+            prev = int(rcum[j - 1]) if j else 0
+            within = -((prev - need_total) // int(q_csz[j]))   # ceil, >= 1
+            t_regs = q_regs[:j + 1]
+            t_starts = q_starts[:j + 1]
+            t_cnts = q_cnts[:j + 1].copy()
+            t_cnts[j] = within
+            t_csz = q_csz[:j + 1]
+            plan = {
                 "rlist": self._rlist,
-                "old": (o_regs[:M], o_idxs[:M], o_sizes[:M], o_dups[:M]),
+                "old_runs": (t_regs, t_starts, t_cnts, t_csz),
                 "own_evicted": np.zeros(0, dtype=np.int64),
-                "m": m, "v_dup": o_dups[:M], "v_sizes": o_sizes[:M],
             }
+            if want_m:
+                # per-insert victim consumption — only the evicting async
+                # bulk copy prices arrivals off it; fault batches skip it.
+                # Runs with mixed duplicated flags are split at the flag
+                # transitions into dup-uniform SUBRUNS (flag transitions are
+                # rare: duplication is a per-advise region property), so m
+                # and the write-back schedule are always piecewise linear
+                # across subruns — a run-level searchsorted replaces the
+                # per-chunk vcum/searchsorted over the whole victim set,
+                # and no victim is ever expanded to chunk granularity here.
+                s_cnts, s_csz, s_dup = [], [], []
+                for k in range(len(t_regs)):
+                    start, cnt = int(t_starts[k]), int(t_cnts[k])
+                    rk = self._rlist[int(t_regs[k])]
+                    if not rk.dup_ever:
+                        s_cnts.append([cnt])
+                        s_dup.append([False])
+                        s_csz.append([int(t_csz[k])])
+                        continue
+                    dk = rk.duplicated[start:start + cnt]
+                    b = np.flatnonzero(dk[1:] != dk[:-1]) + 1
+                    if not len(b):
+                        s_cnts.append([cnt])
+                        s_dup.append([bool(dk[0])])
+                        s_csz.append([int(t_csz[k])])
+                    else:
+                        ends = np.concatenate([b, [cnt]])
+                        begins = np.concatenate([[0], b])
+                        s_cnts.append(ends - begins)
+                        s_dup.append(dk[begins])
+                        s_csz.append(np.full(len(b) + 1, int(t_csz[k]),
+                                             dtype=np.int64))
+                u_cnts = np.concatenate(s_cnts).astype(np.int64)
+                u_csz = np.concatenate(s_csz).astype(np.int64)
+                run_dup = np.concatenate(s_dup).astype(bool)
+                cnt_cum = np.concatenate([[0], np.cumsum(u_cnts)])
+                byte_ends = np.cumsum(u_cnts * u_csz)
+                byte_cum = byte_ends - u_cnts * u_csz
+                need_pos = np.maximum(need, 0)
+                k1 = np.searchsorted(byte_ends, need_pos, side="left")
+                m = cnt_cum[k1] - (-(need_pos - byte_cum[k1])
+                                   // u_csz[k1])              # ceil divide
+                plan["m"] = np.where(need > 0, m, 0)
+                plan["v_run"] = (u_cnts, u_csz, run_dup, cnt_cum)
+            return plan
         # exact replay of the seed's pop interleaving at run granularity
         # (residency.merge_pop_runs): equal-size run pairs consume each
         # other 1-for-1 in closed form, odd-sized tail chunks step
         # chunk-at-a-time, and only the consumed prefixes are expanded.
         free = self.device_capacity - self.device_used
+        s0 = int(ids[0])
+        sizes = (r.sizes[s0:s0 + n_own]
+                 if int(ids[-1]) - s0 == n_own - 1 else r.sizes[ids])
         _, own_cnts, own_csz = chunk_runs(ids, sizes)
         res = merge_pop_runs(
             (own_csz, own_cnts),
@@ -911,40 +1150,51 @@ class UMSimulator:
             q_csz[n_un_runs:], upto=n_pin_taken) if n_pin_taken else None
         exp = {"un": un_exp, "pin": pin_exp}
         own_idx = np.arange(n_own_taken, dtype=np.int64)
-        v_sizes, v_dup = [], []
-        for src, off, cnt in segments:
-            if src == "own":
-                v_sizes.append(sizes[off:off + cnt])
-                v_dup.append(np.broadcast_to(
-                    np.asarray(own_dup, dtype=bool), (n_own,))[off:off + cnt])
-            else:
-                _, _, e_sizes, e_dups = exp[src]
-                v_sizes.append(e_sizes[off:off + cnt])
-                v_dup.append(e_dups[off:off + cnt])
         empty = (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64),
                  np.zeros(0, dtype=np.int64), np.zeros(0, dtype=bool))
         u = un_exp if un_exp is not None else empty
         p = pin_exp if pin_exp is not None else empty
-        return {
+        plan = {
             "rlist": self._rlist,
             "old": tuple(np.concatenate([a, b]) for a, b in zip(u, p)),
             "own_evicted": own_idx,
-            "m": expand_m_segs(m_segs, n_own),
-            "v_dup": (np.concatenate(v_dup) if v_dup
-                      else np.zeros(0, dtype=bool)),
-            "v_sizes": (np.concatenate(v_sizes) if v_sizes
-                        else np.zeros(0, dtype=np.int64)),
         }
+        if want_m:
+            v_sizes, v_dup = [], []
+            for src, off, cnt in segments:
+                if src == "own":
+                    v_sizes.append(sizes[off:off + cnt])
+                    v_dup.append(np.broadcast_to(
+                        np.asarray(own_dup, dtype=bool),
+                        (n_own,))[off:off + cnt])
+                else:
+                    _, _, e_sizes, e_dups = exp[src]
+                    v_sizes.append(e_sizes[off:off + cnt])
+                    v_dup.append(e_dups[off:off + cnt])
+            plan["m"] = expand_m_segs(m_segs, n_own)
+            plan["v_dup"] = (np.concatenate(v_dup) if v_dup
+                             else np.zeros(0, dtype=bool))
+            plan["v_sizes"] = (np.concatenate(v_sizes) if v_sizes
+                               else np.zeros(0, dtype=np.int64))
+        return plan
 
     def _commit_evictions(self, r: Region, plan) -> None:
         """Apply a victim plan: old residents across regions, then the
         batch's own evicted members (all effects are additive)."""
-        o_regs, o_idxs, o_sizes, o_dups = plan["old"]
-        self._apply_evictions(plan["rlist"], o_regs, o_idxs, o_sizes, o_dups)
+        if "old_runs" in plan:
+            self._apply_eviction_runs(plan["rlist"], *plan["old_runs"])
+        else:
+            o_regs, o_idxs, o_sizes, o_dups = plan["old"]
+            self._apply_evictions(plan["rlist"], o_regs, o_idxs, o_sizes,
+                                  o_dups)
         own = plan["own_evicted"]
         if len(own):
-            eids = np.asarray(plan["own_ids"])[own]
-            edup = np.asarray(plan["own_dup"])[own]
+            # own_evicted is always the prefix arange(n_own_taken) (the
+            # seed pops a batch's own chunks in insertion order): slice
+            # views instead of fancy gathers
+            cnt = len(own)
+            eids = np.asarray(plan["own_ids"])[:cnt]
+            edup = np.asarray(plan["own_dup"])[:cnt]
             self._apply_evictions([r], np.zeros(len(eids), dtype=np.int64),
                                   eids, r.sizes[eids], edup)
         self._pressure = True
@@ -952,25 +1202,45 @@ class UMSimulator:
     def _fault_batch(self, r: Region, ids: np.ndarray, *, duplicate: bool) -> None:
         """Device-side faults for a run of non-resident chunks: batched
         eviction, fault-group, and transfer accounting (seed-equivalent)."""
-        sizes = r.sizes[ids]
-        ins_cum = np.cumsum(sizes)
+        s0 = int(ids[0])
+        n = len(ids)
+        contig = int(ids[-1]) - s0 == n - 1
+        sl = slice(s0, s0 + n) if contig else ids
+        csz = int(r.sizes[s0])
+        s_last = int(r.sizes[int(ids[-1])])
+        # regions are built uniform-size with at most an odd final chunk, so
+        # a contiguous run's interior is uniform whenever its second-to-last
+        # element matches — byte totals and the pressure boundary collapse
+        # to scalars with no cumsum over the megachunk page arrays
+        uniform = contig and (n < 2 or int(r.sizes[s0 + n - 2]) == csz)
+        if uniform:
+            ins_cum = None
+            total = (n - 1) * csz + s_last
+        else:
+            sizes = r.sizes[sl]
+            ins_cum = np.cumsum(sizes)
+            total = int(ins_cum[-1])
         free0 = self.device_capacity - self.device_used
-        need_total = int(ins_cum[-1]) - free0
+        need_total = total - free0
         pressure0 = self._pressure
-        pressure_from = len(ids)         # batch index where pressure begins
-        virgin = ~r.populated[ids]
+        pressure_from = n                # batch index where pressure begins
+        virgin = ~r.populated[sl]
         pm = ~virgin
-        own_dup = pm & duplicate
+        own_dup = pm if duplicate else np.broadcast_to(np.bool_(False), (n,))
         plan = None
         if need_total > 0:
-            plan = self._plan_victims(r, ids, ins_cum - free0, own_dup)
+            need = (np.array([need_total], dtype=np.int64) if uniform
+                    else ins_cum - free0)
+            plan = self._plan_victims(r, ids, need, own_dup, want_m=False)
             if plan is None:
                 for i in ids:            # exact scalar fallback
                     self._fault_one(r, int(i), duplicate=duplicate)
                 return
             # the chunk whose insertion first exceeded capacity (and every
             # later one) faults in the pressure regime
-            pressure_from = int(np.searchsorted(ins_cum, free0, side="right"))
+            pressure_from = (min(n - 1, free0 // csz) if uniform
+                             else int(np.searchsorted(ins_cum, free0,
+                                                      side="right")))
         lat = self.p.fault_latency_us * 1e-6
         nv = int(virgin.sum())
         if nv:
@@ -982,23 +1252,47 @@ class UMSimulator:
             self.t_device += events * lat
             self.report.fault_stall_s += events * lat
             self.report.n_faults += events
-        if pm.any():
-            pids = ids[pm]
-            psz = sizes[pm]
+        n_pm = int(pm.sum())
+        if n_pm:
+            # uniform batches: only the final chunk can be odd-sized, so the
+            # per-chunk byte/page-group sums are scalar arithmetic off the
+            # pm counts — no index expansion or size gathers
+            last_pm = bool(pm[n - 1])
+            if uniform:
+                pm_bytes = n_pm * csz + ((s_last - csz) if last_pm else 0)
+            else:
+                psz = sizes[pm]
+                pm_bytes = int(psz.sum())
             if duplicate and self.p.host_can_access_device:   # coherent fabric
-                pressured = pressure0 | (np.nonzero(pm)[0] >= pressure_from)
-                if pressured.any():
+                if pressure0:
+                    n_pressured = n_pm
+                elif pressure_from < n:
+                    n_pressured = int(pm[pressure_from:].sum())
+                else:
+                    n_pressured = 0
+                if n_pressured:
                     # block heuristic disabled: re-duplication faults at
                     # system page granularity — the Fig. 7c/8c explosion
-                    pgroups = np.maximum(1, psz[pressured] // self.p.page_bytes)
-                    n_p = int(pgroups.sum())
+                    if uniform:
+                        g = max(1, csz // self.p.page_bytes)
+                        n_p = n_pressured * g
+                        if last_pm and s_last != csz:
+                            n_p += max(1, s_last // self.p.page_bytes) - g
+                    else:
+                        pressured = (pressure0
+                                     | (np.nonzero(pm)[0] >= pressure_from))
+                        pgroups = np.maximum(
+                            1, psz[pressured] // self.p.page_bytes)
+                        n_p = int(pgroups.sum())
                     if self._inj is not None:
                         n_p = self._inj.fault_events(n_p)
                     self.report.fault_stall_s += n_p * lat
                     self.t_device += n_p * lat
                     self.report.n_faults += n_p
-                if (~pressured).any():
-                    events = self._n_fault_events(r, pids[~pressured])
+                if n_pressured < n_pm:
+                    pf = pressure_from if not pressure0 else 0
+                    up_ids = ids[:pf][pm[:pf]]
+                    events = self._n_fault_events(r, up_ids)
                     if self._inj is not None:
                         events = self._inj.fault_events(events)
                     stall = events * lat * 0.5                # no host unmap
@@ -1006,23 +1300,26 @@ class UMSimulator:
                     self.t_device += stall
                     self.report.n_faults += events
             else:
-                events = self._n_fault_events(r, pids)
+                events = self._n_fault_events(r, ids[pm])
                 if self._inj is not None:
                     events = self._inj.fault_events(events)
                 self.report.fault_stall_s += events * lat
                 self.t_device += events * lat
                 self.report.n_faults += events
-            xfer = float((psz / (self.p.link_bw_gbs * GB
-                                 * self.p.fault_migration_efficiency)).sum())
+            xfer = pm_bytes / (self.p.link_bw_gbs * GB
+                               * self.p.fault_migration_efficiency)
             if self._inj is not None:
                 scale, backoff = self._inj.transfer(xfer)
                 xfer *= scale
                 self.t_device += backoff
             self.t_device += xfer
             self.report.htod_s += xfer
-            self.report.htod_bytes += int(psz.sum())
-        r.populated[ids] = True
-        self._insert_resident(r, ids, duplicate=own_dup)
+            self.report.htod_bytes += pm_bytes
+        r.populated[sl] = True
+        # scalar False keeps the slice-write path; the mixed virgin/dup case
+        # needs the per-chunk array
+        self._insert_resident(r, ids,
+                              duplicate=(own_dup if duplicate else False))
         if plan is not None:
             plan["own_ids"] = ids
             plan["own_dup"] = own_dup
@@ -1056,37 +1353,205 @@ class UMSimulator:
         reproducing the seed's per-chunk evict -> copy interleaving in closed
         form (victim consumption via searchsorted; copy-stream clock via a
         running-max recurrence)."""
-        sizes = r.sizes[ids]
-        x = sizes / (self.p.link_bw_gbs * GB)
-        ins_cum = np.cumsum(sizes)
+        s0 = int(ids[0])
+        n = len(ids)
+        sl = slice(s0, s0 + n)           # _copy_walk always passes a run
+        csz = int(r.sizes[s0])
+        s_last = int(r.sizes[s0 + n - 1])
+        uniform = n < 2 or int(r.sizes[s0 + n - 2]) == csz
         free0 = self.device_capacity - self.device_used
-        need = ins_cum - free0           # bytes to free before each insert
-        if int(need[-1]) <= 0:
+        if uniform:
+            total = (n - 1) * csz + s_last
+        else:
+            sizes = r.sizes[sl]
+            ins_cum = np.cumsum(sizes)
+            total = int(ins_cum[-1])
+        if total - free0 <= 0:
             # fast path: everything fits
-            X = np.cumsum(x)
+            if uniform:
+                # uniform run: the transfer cumsum is a cached-ramp multiply
+                # (one pass, no per-chunk divide), odd tail patched scalar
+                self._ramps(n)
+                X = self._ramp_f1[:n] * (csz / (self.p.link_bw_gbs * GB))
+                if s_last != csz:
+                    X[n - 1] = X[n - 2] + s_last / (self.p.link_bw_gbs * GB)
+            else:
+                X = np.cumsum(sizes / (self.p.link_bw_gbs * GB))
             backoff = 0.0
             if self._inj is not None:
                 # one event per bulk-copy run: degradation scales every
                 # chunk's arrival, backoff delays the run's start
                 scale, backoff = self._inj.transfer(float(X[-1]))
-                X = X * scale
+                X *= scale
+            xfer_total = float(X[-1])
             if asynchronous:
-                base = max(self.t_copy, self.t_device) + backoff
-                arr = base + X
-                self.t_copy = float(arr[-1])
+                X += max(self.t_copy, self.t_device) + backoff
+                self.t_copy = float(X[-1])
             else:
-                arr = self.t_device + backoff + X
-                self.t_device = float(arr[-1])
-            r.arrival[ids] = arr
-            self.report.htod_s += float(X[-1])
-            self.report.htod_bytes += int(ins_cum[-1])
-            r.populated[ids] = True
+                X += self.t_device + backoff
+                self.t_device = float(X[-1])
+            r.arrival[sl] = X
+            self.report.htod_s += xfer_total
+            self.report.htod_bytes += total
+            r.populated[sl] = True
             self._insert_resident(r, ids, duplicate=duplicate)
             return
         if not asynchronous or not self._bulk_copy_evicting(r, ids, duplicate):
             for i in ids:                # exact scalar fallback
                 self._bulk_copy_one(r, int(i), duplicate=duplicate,
                                     asynchronous=asynchronous)
+
+    def _bulk_copy_evicting_uniform(self, r: Region, ids: np.ndarray,
+                                    duplicate: bool, csz: int) -> bool | None:
+        """Scalar pricing for a size-uniform evicting bulk copy — every run
+        at page granularity (only a region's final chunk may be odd-sized,
+        and a run is region-contiguous, so at most the *last* insert
+        differs).  When the uniform body's chunks and all victims share one
+        size ``csz``, each insert adds exactly the bytes one eviction frees,
+        so victim consumption steps by one per insert once free space is
+        exhausted: the seed's running-max recurrence
+        ``t_copy_i = max(t_copy_{i-1}, d_i) + x_i`` has non-increasing
+        ``d_i - X_{i-1}`` and collapses to the scalar ``u = max(t_copy_0,
+        d_0)`` — no per-chunk victim expansion, cumsum, or searchsorted at
+        all.  Odd-size *victims* (a prefix crossing other regions' tails)
+        still collapse when every victim is duplicated (write-backs all
+        free: d_i == t_device) or the copy stream already leads the device
+        clock by the whole write-back budget (the running max is t_copy_0
+        itself).  A trailing odd-size insert is priced by one extra scalar
+        recurrence step off the total write-back ``W``.  Returns True
+        (handled), False (no plan: scalar fallback), or None (own-batch
+        eviction, or victim layouts only the per-insert path prices)."""
+        s0 = int(ids[0])
+        n = len(ids)
+        s_last = int(r.sizes[s0 + n - 1])
+        tail_odd = s_last != csz
+        if tail_odd and n < 2:
+            return None              # a lone odd chunk: nothing to collapse
+        free0 = self.device_capacity - self.device_used
+        total_bytes = (n - 1) * csz + s_last
+        own_dup = np.broadcast_to(np.bool_(duplicate), (n,))
+        plan = self._plan_victims(
+            r, ids, np.array([total_bytes - free0], dtype=np.int64), own_dup,
+            want_m=False)
+        if plan is None:
+            return False
+        if "old_runs" not in plan:
+            return None              # streaming thrash: own chunks evicted
+        t_regs, t_starts, t_cnts, t_csz = plan["old_runs"]
+        bw = self.p.link_bw_gbs * GB
+        x = csz / bw
+        x_last = s_last / bw
+        t_copy0 = self.t_copy
+        if self._inj is not None:
+            scale, backoff = self._inj.transfer((n - 1) * x + x_last)
+            x = x * scale
+            x_last = x_last * scale
+            t_copy0 = t_copy0 + backoff
+        q = free0 // csz             # inserts absorbed by free space
+        arr = None
+        if not bool((t_csz != csz).any()):
+            # size-uniform victims: d_i steps by 0 or x per insert, so
+            # d_i - X_{i-1} is non-increasing and u = max(t_copy0, d_0)
+            if q >= 1:
+                d0 = self.t_device   # first insert evicts nothing
+            else:
+                # first insert consumes exactly one victim; its write-back
+                # is free when that chunk is duplicated (a clean drop)
+                rv0 = self._rlist[int(t_regs[0])]
+                first_dup = rv0.dup_ever and bool(
+                    rv0.duplicated[int(t_starts[0])])
+                d0 = self.t_device + (0.0 if first_dup else x)
+            u = t_copy0 if t_copy0 > d0 else d0
+            W = 0.0
+            if tail_odd:
+                # the last insert needs < csz bytes, so it consumes at most
+                # one more victim: m_{n-1} is the whole plan and
+                # d_{n-1} = t_device + W, the victims' total *clean*
+                # write-back (matching the general path's d_i — write-backs
+                # draw their own injector events at commit time)
+                mig = sum(
+                    int(t_cnts[k])
+                    - (int(self._rlist[int(t_regs[k])]
+                           .duplicated[int(t_starts[k]):
+                                       int(t_starts[k])
+                                       + int(t_cnts[k])].sum())
+                       if self._rlist[int(t_regs[k])].dup_ever else 0)
+                    for k in range(len(t_regs)))
+                W = mig * x
+        else:
+            # odd-size victims in the prefix: split every run into
+            # dup-uniform subruns and price per SEGMENT.  Subrun k absorbs
+            # the body inserts j in [j_k, j_{k+1}) with
+            # j_k = (bytes-before-k + free0) // csz; within a segment
+            # g_j = d_j - X_{j-1} is constant (migrated, size csz: each
+            # insert consumes exactly one victim), decreasing (duplicated:
+            # d flat, X grows), or a single insert (odd-size subruns are
+            # lone region tails, < csz bytes), so the running max only
+            # moves at segment starts — O(subruns) scalars plus one repeat.
+            sub_cnts, sub_csz, sub_dup = [], [], []
+            for k in range(len(t_regs)):
+                start, cnt = int(t_starts[k]), int(t_cnts[k])
+                zk = int(t_csz[k])
+                rk = self._rlist[int(t_regs[k])]
+                if not rk.dup_ever:
+                    sub_cnts.append([cnt])
+                    sub_dup.append([False])
+                    sub_csz.append([zk])
+                    continue
+                dk = rk.duplicated[start:start + cnt]
+                b = np.flatnonzero(dk[1:] != dk[:-1]) + 1
+                if len(b):
+                    begins = np.concatenate([[0], b])
+                    sub_cnts.append(np.diff(np.concatenate([begins, [cnt]])))
+                    sub_dup.append(dk[begins])
+                    sub_csz.append(np.full(len(begins), zk, dtype=np.int64))
+                else:
+                    sub_cnts.append([cnt])
+                    sub_dup.append([bool(dk[0])])
+                    sub_csz.append([zk])
+            c = np.concatenate(sub_cnts).astype(np.int64)
+            z = np.concatenate(sub_csz).astype(np.int64)
+            f = np.concatenate(sub_dup).astype(bool)
+            if bool((z > csz).any()) or bool(((z != csz) & (c > 1)).any()):
+                return None      # foreign layout: per-insert pricing
+            vd = np.where(f, 0.0, z / bw)
+            B = np.concatenate([[0], np.cumsum(c * z)])
+            Wc = np.concatenate([[0.0], np.cumsum(c * vd)])
+            n_body = n - 1 if tail_odd else n
+            j = np.clip((B + free0) // csz, 0, n_body)
+            K = len(c)
+            # d at each subrun's first insert: that insert still needs
+            # (j_k + 1) * csz - free0 - B_k bytes out of subrun k
+            a = (j[:K] + 1) * csz - free0 - B[:K]
+            d0 = self.t_device + Wc[:K] + (-(-a // z)) * vd
+            lens = np.diff(np.concatenate([[0], j]))
+            g = np.concatenate([[self.t_device], d0 - j[:K] * x])
+            g = np.where(np.concatenate([[True], lens[1:] > 0]), g, -np.inf)
+            u_segs = np.maximum(np.maximum.accumulate(g), t_copy0)
+            arr = r.arrival[s0:s0 + n]     # computed in place (overwritten
+            self._ramps(n_body)            # wholesale below)
+            np.multiply(self._ramp_f1[:n_body], x, out=arr[:n_body])
+            arr[:n_body] += np.repeat(u_segs, lens)
+            W = float(Wc[-1])    # the whole plan's clean write-back
+        if arr is None:
+            arr = r.arrival[s0:s0 + n]
+            nb = n if not tail_odd else n - 1
+            self._ramps(nb)
+            np.multiply(self._ramp_f1[:nb], x, out=arr[:nb])
+            arr[:nb] += u
+        if tail_odd:
+            prev = float(arr[n - 2])
+            d_last = self.t_device + W
+            arr[n - 1] = (prev if prev > d_last else d_last) + x_last
+        self.t_copy = float(arr[-1])
+        self._insert_resident(r, ids, duplicate=duplicate)
+        r.populated[s0:s0 + n] = True
+        self.report.htod_s += (n - 1) * x + x_last
+        self.report.htod_bytes += total_bytes
+        plan["own_ids"] = ids
+        plan["own_dup"] = own_dup
+        self._commit_evictions(r, plan)
+        return True
 
     def _bulk_copy_evicting(self, r: Region, ids: np.ndarray,
                             duplicate: bool) -> bool:
@@ -1095,11 +1560,41 @@ class UMSimulator:
         copied chunk and the copy-stream clock follow in closed form from the
         static victim layout (_plan_victims); returns False when that layout
         cannot be proven equivalent to the seed's interleaved pops."""
-        sizes = r.sizes[ids]
-        x = sizes / (self.p.link_bw_gbs * GB)
-        ins_cum = np.cumsum(sizes)
-        need = ins_cum - (self.device_capacity - self.device_used)
-        own_dup = np.full(len(ids), bool(duplicate))
+        s0 = int(ids[0])
+        sl = slice(s0, s0 + len(ids))    # always a run (see _bulk_copy_batch)
+        csz = int(r.sizes[s0])
+        if len(ids) < 2 or int(r.sizes[s0 + len(ids) - 2]) == csz:
+            # the body (all but the last chunk) is size-uniform — always
+            # true at page granularity, where only a region's final chunk
+            # can be odd; planning is pure, so a None return falls through
+            # to the general path at no extra cost
+            done = self._bulk_copy_evicting_uniform(r, ids, duplicate, csz)
+            if done is not None:
+                return done
+        n = len(ids)
+        bw = self.p.link_bw_gbs * GB
+        s_last = int(r.sizes[s0 + n - 1])
+        uniform_own = n < 2 or int(r.sizes[s0 + n - 2]) == csz
+        if uniform_own:
+            # uniform body (odd tail at most): the byte deficit before each
+            # insert is an integer arange ramp and the transfer schedule a
+            # float one — no size gather, divide, or cumsum over the run
+            total = (n - 1) * csz + s_last
+            self._ramps(n)
+            need = self._ramp_i1[:n] * csz
+            if s_last != csz:
+                need[n - 1] = total
+            need -= self.device_capacity - self.device_used
+            x_s, x_last = csz / bw, s_last / bw
+            xfer_sum = (n - 1) * x_s + x_last
+        else:
+            sizes = r.sizes[sl]
+            x = sizes / bw
+            ins_cum = np.cumsum(sizes)
+            total = int(ins_cum[-1])
+            need = ins_cum - (self.device_capacity - self.device_used)
+            xfer_sum = float(np.sum(x))
+        own_dup = np.broadcast_to(np.bool_(duplicate), (n,))
         plan = self._plan_victims(r, ids, need, own_dup)
         if plan is None:
             return False
@@ -1110,27 +1605,51 @@ class UMSimulator:
             # below use clean write-back estimates — a schedule-quality
             # approximation (arrivals may be optimistic), never an
             # accounting inconsistency (DESIGN.md §12)
-            scale, backoff = self._inj.transfer(float(np.sum(x)))
-            x = x * scale
+            scale, backoff = self._inj.transfer(xfer_sum)
+            if uniform_own:
+                x_s, x_last = x_s * scale, x_last * scale
+            else:
+                x = x * scale
             t_copy0 = t_copy0 + backoff
         # copy-stream clock: the device clock advances by each migrated
         # victim's write-back before the copy that consumed it, so
         # t_copy_i = max(t_copy_{i-1}, d_i) + x_i with d_i closed-form below;
         # the recurrence solves as a running max shifted by the transfer
         # cumsum
-        v_dtoh = np.where(plan["v_dup"], 0.0,
-                          plan["v_sizes"] / (self.p.link_bw_gbs * GB))
-        dtoh_cum = np.concatenate([[0.0], np.cumsum(v_dtoh)])
-        d = self.t_device + dtoh_cum[plan["m"]]
-        X = np.cumsum(x)
-        u = np.maximum(t_copy0, np.maximum.accumulate(d - (X - x)))
+        if "v_run" in plan:
+            # dup-uniform victim subruns: the write-back time consumed
+            # before insert i is piecewise linear in m[i] across subruns — a
+            # run-level cumsum plus one searchsorted replaces per-chunk
+            # expansion
+            t_cnts, t_csz, run_dup, cnt_cum = plan["v_run"]
+            vd_run = np.where(run_dup, 0.0, t_csz / bw)
+            wb_cum = np.concatenate([[0.0], np.cumsum(t_cnts * vd_run)])
+            m = plan["m"]
+            k2 = np.searchsorted(cnt_cum[1:], m, side="left")
+            d = self.t_device + wb_cum[k2] + (m - cnt_cum[k2]) * vd_run[k2]
+        else:
+            v_dtoh = np.where(plan["v_dup"], 0.0,
+                              plan["v_sizes"] / bw)
+            dtoh_cum = np.concatenate([[0.0], np.cumsum(v_dtoh)])
+            d = self.t_device + dtoh_cum[plan["m"]]
+        if uniform_own:
+            X = self._ramp_f1[:n] * x_s
+            if s_last != csz:
+                X[n - 1] = X[n - 2] + x_last
+            # X[i] - x[i] == i * x_s for the whole run (the odd tail's
+            # X[n-1] - x_last is X[n-2] == (n-1) * x_s by the ramp)
+            d -= self._ramp_f0[:n] * x_s
+            u = np.maximum(t_copy0, np.maximum.accumulate(d))
+        else:
+            X = np.cumsum(x)
+            u = np.maximum(t_copy0, np.maximum.accumulate(d - (X - x)))
         arr = u + X
         self.t_copy = float(arr[-1])
         self._insert_resident(r, ids, duplicate=duplicate)
-        r.arrival[ids] = arr
-        r.populated[ids] = True
+        r.arrival[sl] = arr
+        r.populated[sl] = True
         self.report.htod_s += float(X[-1])
-        self.report.htod_bytes += int(ins_cum[-1])
+        self.report.htod_bytes += total
         plan["own_ids"] = ids
         plan["own_dup"] = own_dup
         self._commit_evictions(r, plan)
@@ -1157,16 +1676,19 @@ class UMSimulator:
                    asynchronous: bool) -> None:
         """Walk chunk indices in order, bulk-copying each maximal candidate
         run.  Candidates are re-evaluated per run because a copy's evictions
-        can change later chunks' state (the seed re-checks lazily per chunk)."""
+        can change later chunks' state (the seed re-checks lazily per chunk).
+        ``candidates(r, pos)`` returns the mask for indices ``pos`` onward
+        only, so each re-evaluation pays for the remaining tail instead of
+        rebuilding (and index-scanning) the full region mask per run."""
         pos = 0
         while pos < r.nchunks:
-            m = candidates(r)[pos:]
-            nz = np.nonzero(m)[0]
-            if not len(nz):
+            m = candidates(r, pos)
+            if not len(m) or not m.any():
                 return
-            start = pos + int(nz[0])
-            brk = np.nonzero(np.diff(nz) != 1)[0]
-            ln = int(brk[0]) + 1 if len(brk) else len(nz)
+            off = int(m.argmax())            # first candidate
+            start = pos + off
+            inv = ~m[off:]
+            ln = int(inv.argmax()) if inv.any() else len(inv)
             self._bulk_copy_batch(r, np.arange(start, start + ln),
                                   duplicate=duplicate, asynchronous=asynchronous)
             pos = start + ln
@@ -1179,7 +1701,8 @@ class UMSimulator:
             raise OversubscriptionError(
                 f"explicit allocation of {r.name} exceeds device memory"
             )
-        self._copy_walk(r, lambda rr: ~rr.resident_mask(),
+        self._copy_walk(r, lambda rr, p: ~(rr.on_device[p:]
+                                           | rr.duplicated[p:]),
                         duplicate=False, asynchronous=False)
         self._audited("explicit_copy_to_device", name)
 
@@ -1232,10 +1755,10 @@ class UMSimulator:
         nch = (r.nchunks if nbytes is None
                else min(r.nchunks, max(1, math.ceil(nbytes / r.chunk_bytes))))
         if dst is MemorySpace.DEVICE:
-            def candidates(rr: Region) -> np.ndarray:
-                m = ~rr.resident_mask()
-                m[nch:] = False
-                return m
+            def candidates(rr: Region, pos: int) -> np.ndarray:
+                if pos >= nch:
+                    return np.zeros(0, dtype=bool)
+                return ~(rr.on_device[pos:nch] | rr.duplicated[pos:nch])
             h0 = self.report.htod_s
             before = r.resident_mask()
             self._copy_walk(r, candidates,
@@ -1292,8 +1815,10 @@ class UMSimulator:
         for r in self.regions.values():
             if r.preferred is not MemorySpace.DEVICE:
                 continue
-            self._copy_walk(r, lambda rr: ~rr.resident_mask() & rr.populated,
-                            duplicate=False, asynchronous=True)
+            self._copy_walk(
+                r, lambda rr, p: (~(rr.on_device[p:] | rr.duplicated[p:])
+                                  & rr.populated[p:]),
+                duplicate=False, asynchronous=True)
 
     def host_write(self, name: str, nbytes: int | None = None) -> None:
         """Host writes the region (e.g. initialization).
@@ -1310,8 +1835,14 @@ class UMSimulator:
         r = self.regions[name]
         nbytes = r.nbytes if nbytes is None else nbytes
         nch = max(1, math.ceil(nbytes / r.chunk_bytes))
-        ids = np.arange(min(nch, r.nchunks))
-        dup_ids = ids[r.duplicated[ids]]
+        nch = min(nch, r.nchunks)
+        # the touched ids are the arange prefix [0, nch): every mask gather
+        # below reads the region arrays through slices instead of index
+        # arrays
+        if r.dup_ever:
+            dup_ids = np.nonzero(r.duplicated[:nch])[0]
+        else:
+            dup_ids = np.zeros(0, dtype=np.int64)
         if len(dup_ids):
             r.duplicated[dup_ids] = False  # write invalidates the duplicate
             gone = dup_ids[~r.on_device[dup_ids]]
@@ -1319,7 +1850,7 @@ class UMSimulator:
             if len(gone):
                 self._index_remove(r, gone)
                 self._pf_clear(r, gone)
-        dev_ids = ids[r.on_device[ids]]
+        dev_ids = np.nonzero(r.on_device[:nch])[0]
         if len(dev_ids):
             sz = r.sizes[dev_ids]
             total = int(sz.sum())
@@ -1353,7 +1884,7 @@ class UMSimulator:
                 self._index_remove(r, dev_ids)
                 r.on_device[dev_ids] = False
                 self._pf_clear(r, dev_ids)
-        r.populated[ids] = True
+        r.populated[:nch] = True
         self._audited("host_write", name)
 
     def host_read(self, name: str, nbytes: int | None = None) -> None:
@@ -1362,8 +1893,9 @@ class UMSimulator:
         r = self.regions[name]
         nbytes = r.nbytes if nbytes is None else nbytes
         nch = max(1, math.ceil(nbytes / r.chunk_bytes))
-        ids = np.arange(min(nch, r.nchunks))
-        sel = ids[r.on_device[ids] & ~r.duplicated[ids]]
+        nch = min(nch, r.nchunks)
+        sel = (np.nonzero(r.on_device[:nch] & ~r.duplicated[:nch])[0]
+               if r.dup_ever else np.nonzero(r.on_device[:nch])[0])
         if not len(sel):
             self._audited("host_read", name)
             return
@@ -1420,7 +1952,9 @@ class UMSimulator:
         def chunk_ids(r: Region) -> np.ndarray:
             frac = partial.get(r.name)
             if frac is None:
-                return np.arange(r.nchunks)
+                if r.all_ids is None:
+                    r.all_ids = np.arange(r.nchunks)
+                return r.all_ids
             n = max(1, int(frac * r.nchunks))
             ids = (r.cursor + np.arange(n)) % r.nchunks
             r.cursor = (r.cursor + n) % r.nchunks
@@ -1433,6 +1967,8 @@ class UMSimulator:
 
         lat = self.p.fault_latency_us * 1e-6
         for r in write_set:
+            if not r.dup_ever:
+                continue
             ids = touched[r.name]
             d = ids[r.duplicated[ids]]
             if len(d):
@@ -1447,17 +1983,27 @@ class UMSimulator:
             pinned_host = r.preferred is MemorySpace.HOST
             dup_flag = r.read_mostly and r in read_set and r not in write_set
             ids = touched[r.name]
+            contig = partial.get(r.name) is None   # ids is arange(nchunks)
             pos, n = 0, len(ids)
             while pos < n:
-                rem = ids[pos:]
-                res = r.on_device[rem] | r.duplicated[rem]
+                if contig:
+                    # dup_ever False guarantees duplicated is all-False:
+                    # read on_device as a view, no or-temp per segment
+                    res = (r.on_device[pos:] | r.duplicated[pos:]
+                           if r.dup_ever else r.on_device[pos:])
+                else:
+                    rem = ids[pos:]
+                    res = (r.on_device[rem] | r.duplicated[rem]
+                           if r.dup_ever else r.on_device[rem])
                 brk = np.nonzero(res != res[0])[0]
-                ln = int(brk[0]) if len(brk) else len(rem)
-                seg = rem[:ln]
+                ln = int(brk[0]) if len(brk) else len(res)
+                seg = ids[pos:pos + ln]
                 if res[0]:
                     # may still be in flight from an async prefetch
-                    am = int(np.argmax(r.arrival[seg]))
-                    mx = float(r.arrival[seg[am]])
+                    arr_seg = (r.arrival[pos:pos + ln] if contig
+                               else r.arrival[seg])
+                    am = int(np.argmax(arr_seg))
+                    mx = float(arr_seg[am])
                     if mx > self.t_device:
                         # exposed (un-hidden) copy time: the kernel reached
                         # data the copy stream has not delivered yet.  Only
@@ -1481,7 +2027,8 @@ class UMSimulator:
         local_bytes = bytes_touched
         if local_bytes is None:
             local_bytes = float(
-                sum(int(r.sizes[touched[r.name]].sum())
+                sum(r.bytes_total if len(touched[r.name]) == r.nchunks
+                    else int(r.sizes[touched[r.name]].sum())
                     for r in read_set + write_set)
             )
         compute = max(
@@ -1496,7 +2043,11 @@ class UMSimulator:
         self.report.remote_s += remote_t
         self.report.remote_bytes += remote_bytes
         for r in write_set:
-            r.populated[touched[r.name]] = True
+            t = touched[r.name]
+            if len(t) == r.nchunks:     # full/wrapped-full touch covers all
+                r.populated[:] = True
+            else:
+                r.populated[t] = True
         self._eager_restore()
         # rolling thrash window (§12): one sample per launch — the deltas
         # since the previous launch, including eviction/fault activity from

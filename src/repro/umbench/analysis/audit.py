@@ -82,7 +82,12 @@ def _audit_queue(sim, q, op: str, region: str | None) -> None:
     """Walk one RunQueue's entries in pop order, reconciling every counter
     against ``entry_ptr`` ground truth.  Stamps are drawn from one global
     clock but the queues interleave arbitrarily, so strict stamp ascent is
-    checked per queue."""
+    checked per queue — only while the engine maintains stamps, i.e. with
+    the audit hook armed (stamps are audit-only state: with ``audit=False``
+    the hot paths skip the per-chunk stamp writes and every pop-order
+    reader uses queue order instead, so a direct ``check_invariants`` call
+    on an unaudited sim checks everything but stamp ascent)."""
+    check_stamps = sim._audit is not None
     qn = "pin" if q.qi else "un"
     if (q.nlive[:q.head] != 0).any():
         _fail("q_live_counters", op, region,
@@ -127,12 +132,13 @@ def _audit_queue(sim, q, op: str, region: str | None) -> None:
                       f"adjacent, fully live, and contiguous — should be "
                       f"one run")
         prev = (s + ln, rg, cz, fully)
-        stamps = r.stamp[members]
-        if int(stamps[0]) <= last or (np.diff(stamps) <= 0).any():
-            _fail("stamp_order", op, region,
-                  f"{qn} queue entry {e} ({r.name}) breaks ascending "
-                  f"stamp order at pop position {total_chunks}")
-        last = int(stamps[-1])
+        if check_stamps:
+            stamps = r.stamp[members]
+            if int(stamps[0]) <= last or (np.diff(stamps) <= 0).any():
+                _fail("stamp_order", op, region,
+                      f"{qn} queue entry {e} ({r.name}) breaks ascending "
+                      f"stamp order at pop position {total_chunks}")
+            last = int(stamps[-1])
         total_chunks += nl
         total_bytes += nl * cz
     if total_chunks != q.live_chunks:

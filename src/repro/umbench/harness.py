@@ -341,9 +341,43 @@ def matrix_specs(apps=None, platform_names=DEFAULT_PLATFORMS,
     ]
 
 
+def _run_spec_batch(args: tuple) -> list:
+    """Top-level (picklable) batch runner: one pool task runs a group of
+    cells sharing (platform, regime, granularity) back-to-back, amortizing
+    per-task dispatch/IPC over the group (DESIGN.md §15).  Cells stay
+    independent — the runner builds a fresh simulator per cell — so the
+    batch's results are field-for-field the per-cell path's."""
+    runner, specs = args
+    return [runner(s) for s in specs]
+
+
+# cells per pool task: big enough to amortize dispatch, small enough that a
+# long-tail cell cannot serialize the sweep behind its batch-mates
+BATCH_MAX = 8
+
+
+def _plan_batches(pending: list[int], specs: dict[int, tuple],
+                  workers: int) -> list[list[int]]:
+    """Group pending spec indices by (platform, regime, granularity) — the
+    axes that shape simulator state — and chunk each group so every worker
+    sees several batches (load balance beats amortization at the tail)."""
+    groups: dict[tuple, list[int]] = {}
+    for i in pending:
+        s = specs[i]
+        groups.setdefault((s[1], s[3], s[4]), []).append(i)
+    per_task = max(1, min(BATCH_MAX,
+                          -(-len(pending) // max(1, workers * 4))))
+    batches: list[list[int]] = []
+    for group in groups.values():
+        batches.extend(group[k:k + per_task]
+                       for k in range(0, len(group), per_task))
+    return batches
+
+
 def run_specs(specs: list[tuple], workers: int | None = None,
               retries: int = 2, retry_backoff_s: float = 0.5,
-              journal=None, runner=None, failure=None) -> list[CellResult]:
+              journal=None, runner=None, failure=None,
+              cache=None, fingerprint=None) -> list[CellResult]:
     """Run a list of cell specs (5- or 7-tuples, see ``_run_cell_spec``),
     returning results in spec order.
 
@@ -357,31 +391,55 @@ def run_specs(specs: list[tuple], workers: int | None = None,
     The robust sweep core (DESIGN.md §12): cells already present in
     ``journal`` (a ``journal.SweepJournal``) are replayed from disk
     instead of re-run; fresh results are journaled as they complete.  With
-    ``workers`` > 1 the cells fan out over a process pool — a worker crash
-    breaks only that pool generation: the casualties are retried up to
-    ``retries`` times *in isolation* (one cell per single-worker pool,
+    ``workers`` > 1 the cells fan out over a process pool in batches
+    grouped by (platform, regime, granularity) — one pool task runs a
+    whole batch, amortizing dispatch/IPC (DESIGN.md §15) — and a worker
+    crash breaks only that pool generation: the casualties are retried up
+    to ``retries`` times *in isolation* (one cell per single-worker pool,
     after exponential backoff), so a deterministically crashing cell takes
     the blame alone and becomes a failure record while its innocent
-    pool-mates succeed on their first isolated retry.  In-cell exceptions
+    batch-mates succeed on their first isolated retry.  In-cell exceptions
     and timeouts never reach this layer — ``run_cell`` already converts
     them to failure records.
+
+    ``cache`` (a ``cellcache.CellCache``) adds the content-addressed layer
+    (DESIGN.md §15) *after* the journal: journal replay keeps its resume
+    semantics, cache hits answer cells whose inputs and engine are
+    unchanged, and fresh results (plus journal replays) are recorded back.
+    ``fingerprint(spec) -> str`` computes the input hash — the default is
+    the matrix-cell ``cellcache.spec_fingerprint``.
     """
     runner = _run_cell_spec if runner is None else runner
     failure = _failure_cell if failure is None else failure
+    if cache is not None and fingerprint is None:
+        from repro.umbench.cellcache import spec_fingerprint
+        fingerprint = spec_fingerprint
     results: dict[int, CellResult] = {}
     pending: list[int] = []
+    fps: dict[int, str] = {}
     for i, s in enumerate(specs):
+        if cache is not None:
+            fps[i] = fingerprint(s)
         cached = journal.lookup(_spec_key(s)) if journal is not None else None
         if cached is not None:
             results[i] = cached
-        else:
-            pending.append(i)
+            if cache is not None:
+                cache.record(cached, fps[i])    # converge cache on resume
+            continue
+        if cache is not None:
+            hit = cache.lookup(_spec_key(s), fps[i])
+            if hit is not None:
+                results[i] = hit
+                continue
+        pending.append(i)
 
     def _done(i: int, cell: CellResult) -> None:
         results[i] = cell
         if journal is not None:
             journal.ran += 1
             journal.record(cell)
+        if cache is not None:
+            cache.record(cell, fps[i])
 
     if pending and workers is not None and workers > 1:
         def _resolve(s: tuple) -> tuple:
@@ -395,27 +453,31 @@ def run_specs(specs: list[tuple], workers: int | None = None,
         while pending:
             crashed: list[int] = []
             if round_no == 0:
+                batches = _plan_batches(pending, rspecs, workers)
                 with ProcessPoolExecutor(max_workers=workers) as pool:
                     futs = {}
                     try:
-                        for i in pending:
-                            futs[pool.submit(runner, rspecs[i])] = i
+                        for b in batches:
+                            task = (runner, tuple(rspecs[i] for i in b))
+                            futs[pool.submit(_run_spec_batch, task)] = b
                     except BrokenProcessPool:
                         pass        # pool died mid-submit: the unsubmitted
                     #                 cells fall through to `crashed` below
-                    submitted = set(futs.values())
+                    submitted = {i for b in futs.values() for i in b}
                     crashed.extend(i for i in pending if i not in submitted)
                     for fut in as_completed(futs):
-                        i = futs[fut]
+                        b = futs[fut]
                         try:
-                            cell = fut.result()
+                            cells = fut.result()
                         except BrokenProcessPool:
-                            crashed.append(i)
+                            crashed.extend(b)
                             continue
                         except Exception as e:  # noqa: BLE001 — unpicklable
-                            cell = failure(rspecs[i],
-                                           f"{type(e).__name__}: {e}")
-                        _done(i, cell)
+                            cells = [failure(rspecs[i],
+                                             f"{type(e).__name__}: {e}")
+                                     for i in b]
+                        for i, cell in zip(b, cells):
+                            _done(i, cell)
             else:
                 # retry casualties one per single-worker pool: a cell that
                 # crashes deterministically must not keep taking innocent
@@ -455,23 +517,25 @@ def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
                workers: int | None = None, faults=None,
                cell_timeout_s: float | None = None,
                retries: int = 2, retry_backoff_s: float = 0.5,
-               journal=None) -> list[CellResult]:
+               journal=None, cache=None) -> list[CellResult]:
     """Run the experiment matrix; ``workers`` > 1 fans the independent cells
     out over a process pool (cells are returned in matrix order either way).
     ``faults``/``cell_timeout_s``/``retries``/``journal`` plug in the §12
-    robustness layer — see ``run_specs``."""
+    robustness layer, ``cache`` the §15 content-addressed cell cache — see
+    ``run_specs``."""
     specs = matrix_specs(apps, platform_names, regimes, variants, granularity)
     if faults is not None or cell_timeout_s is not None:
         # FaultScenario objects ride the spec as-is (picklable frozen
         # dataclass); _spec_key reduces them to their name
         specs = [s + (faults, cell_timeout_s) for s in specs]
     return run_specs(specs, workers=workers, retries=retries,
-                     retry_backoff_s=retry_backoff_s, journal=journal)
+                     retry_backoff_s=retry_backoff_s, journal=journal,
+                     cache=cache)
 
 
 def run_extended_matrix(workers: int | None = None,
                         granularity: str = "group",
-                        journal=None) -> list[CellResult]:
+                        journal=None, cache=None) -> list[CellResult]:
     """The seed matrix plus the Grace-Hopper platform, the 200 % regime, and
     the beyond-paper variant tiers (svm_remote and um_hybrid_counters are
     N/A on platforms without a coherent fabric; um_pinned_zero_copy needs
@@ -480,18 +544,18 @@ def run_extended_matrix(workers: int | None = None,
                       regimes=EXTENDED_REGIMES,
                       variants=EXTENDED_VARIANTS,
                       granularity=granularity, workers=workers,
-                      journal=journal)
+                      journal=journal, cache=cache)
 
 
 def run_page_matrix(workers: int | None = None,
-                    journal=None) -> list[CellResult]:
+                    journal=None, cache=None) -> list[CellResult]:
     """The full extended matrix at 64 KB system-page granularity — the
     regime where fault counts explode (Fig. 7c/8c) and where chunk state is
     ~400k-1.5M pages per region on 96 GB platforms.  Routinely runnable
     since the incremental residency index / run-coalescing rewrite
     (DESIGN.md §9); wall time is tracked in BENCH_umbench.json."""
     return run_extended_matrix(workers=workers, granularity="page",
-                               journal=journal)
+                               journal=journal, cache=cache)
 
 
 def default_workers() -> int:

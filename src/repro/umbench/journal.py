@@ -24,13 +24,61 @@ import os
 
 from repro.core.simulator import SimReport
 
-__all__ = ["SweepJournal", "cell_key"]
+__all__ = ["SweepJournal", "cell_key", "decode_cell", "encode_cell"]
 
 
 def cell_key(cell) -> tuple:
     """Journal identity of a CellResult (or anything with its fields)."""
     return (cell.app, cell.platform, cell.variant, cell.regime,
             cell.granularity, getattr(cell, "faults", None))
+
+
+def encode_cell(cell) -> dict:
+    """One cell as a JSON-able record — the journal's line format, shared
+    with the content-addressed cell cache (``umbench.cellcache``) so a
+    cache-replayed cell is reconstructed by exactly the code path the
+    crash-resume journal already proves bit-identical."""
+    rec = {
+        "key": list(cell_key(cell)),
+        "report": (None if cell.report is None
+                   else cell.report.to_json_dict()),
+        "error": getattr(cell, "error", None),
+    }
+    error_kind = getattr(cell, "error_kind", None)
+    if error_kind is not None:
+        rec["error_kind"] = error_kind  # "lint"/"audit" analysis tag
+    #                                     (failures are retried on load,
+    #                                     so this is a diagnostic field)
+    kind = getattr(cell, "journal_kind", "cell")
+    if kind != "cell":
+        rec["kind"] = kind  # e.g. "serving": reconstructed as its own
+    #                         cell family on load; absent = matrix cell,
+    #                         so pre-existing journals load unchanged
+    return rec
+
+
+def decode_cell(rec: dict):
+    """Reconstruct a clean cell from :func:`encode_cell`'s record shape.
+    Only clean records are decodable by design: failure records are
+    *incomplete* (journal loads skip them; the cache never stores them)."""
+    from repro.umbench.harness import CellResult
+    rep = rec.get("report")
+    if rec.get("kind") == "serving":
+        from repro.umbench.serving.metrics import ServingReport
+        from repro.umbench.serving.sweep import ServingCellResult
+        return ServingCellResult(
+            app=rec["key"][0], platform=rec["key"][1],
+            variant=rec["key"][2], regime=rec["key"][3],
+            report=(None if rep is None
+                    else ServingReport.from_json_dict(rep)),
+            granularity=rec["key"][4], faults=rec["key"][5],
+        )
+    return CellResult(
+        app=rec["key"][0], platform=rec["key"][1],
+        variant=rec["key"][2], regime=rec["key"][3],
+        report=(None if rep is None else SimReport.from_json_dict(rep)),
+        granularity=rec["key"][4], faults=rec["key"][5],
+    )
 
 
 class SweepJournal:
@@ -59,7 +107,6 @@ class SweepJournal:
 
     # -- load ------------------------------------------------------------------
     def _load(self) -> None:
-        from repro.umbench.harness import CellResult
         if not os.path.exists(self.path):
             return
         with open(self.path) as f:
@@ -75,47 +122,12 @@ class SweepJournal:
                     continue
                 if rec.get("error") is not None:
                     continue        # failures are incomplete: retry them
-                rep = rec.get("report")
-                if rec.get("kind") == "serving":
-                    from repro.umbench.serving.metrics import ServingReport
-                    from repro.umbench.serving.sweep import ServingCellResult
-                    cell = ServingCellResult(
-                        app=rec["key"][0], platform=rec["key"][1],
-                        variant=rec["key"][2], regime=rec["key"][3],
-                        report=(None if rep is None
-                                else ServingReport.from_json_dict(rep)),
-                        granularity=rec["key"][4], faults=rec["key"][5],
-                    )
-                else:
-                    cell = CellResult(
-                        app=rec["key"][0], platform=rec["key"][1],
-                        variant=rec["key"][2], regime=rec["key"][3],
-                        report=(None if rep is None
-                                else SimReport.from_json_dict(rep)),
-                        granularity=rec["key"][4], faults=rec["key"][5],
-                    )
-                self.completed[tuple(rec["key"])] = cell
+                self.completed[tuple(rec["key"])] = decode_cell(rec)
 
     # -- append ----------------------------------------------------------------
     def record(self, cell) -> None:
         """Durably append one completed (or failed) cell."""
-        rec = {
-            "key": list(cell_key(cell)),
-            "report": (None if cell.report is None
-                       else cell.report.to_json_dict()),
-            "error": getattr(cell, "error", None),
-        }
-        error_kind = getattr(cell, "error_kind", None)
-        if error_kind is not None:
-            rec["error_kind"] = error_kind  # "lint"/"audit" analysis tag
-        #                                     (failures are retried on load,
-        #                                     so this is a diagnostic field)
-        kind = getattr(cell, "journal_kind", "cell")
-        if kind != "cell":
-            rec["kind"] = kind  # e.g. "serving": reconstructed as its own
-        #                         cell family on load; absent = matrix cell,
-        #                         so pre-existing journals load unchanged
-        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.write(json.dumps(encode_cell(cell)) + "\n")
         self._fh.flush()
         os.fsync(self._fh.fileno())
 

@@ -189,10 +189,13 @@ def serving_specs(patterns, platform_names, regimes,
 
 def run_serving_specs(specs: list[tuple], workers: int | None = None,
                       retries: int = 2, retry_backoff_s: float = 0.5,
-                      journal=None) -> list[ServingCellResult]:
+                      journal=None, cache=None) -> list[ServingCellResult]:
     """``harness.run_specs`` with the serving runner plugged in: same
-    journaling, worker-crash isolation, and retry semantics."""
+    journaling, worker-crash isolation, retry, and cell-cache semantics
+    (the serving input fingerprint hashes the cell-salted request trace)."""
+    from repro.umbench.cellcache import serving_spec_fingerprint
     return run_specs(specs, workers=workers, retries=retries,
                      retry_backoff_s=retry_backoff_s, journal=journal,
                      runner=_run_serving_cell_spec,
-                     failure=_serving_failure_cell)
+                     failure=_serving_failure_cell,
+                     cache=cache, fingerprint=serving_spec_fingerprint)

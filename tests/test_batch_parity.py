@@ -1,0 +1,116 @@
+"""Cross-cell batching parity (ISSUE 9 tentpole lock-down).
+
+``harness.run_specs`` amortizes per-cell pool dispatch by grouping
+independent cells that share (platform, regime, granularity) into one
+task.  Batching is a scheduling concern only — these tests pin that
+contract: randomized samples of page+group cells run batched (through the
+pool) and sequentially (in-process, one ``_run_cell_spec`` per spec) must
+agree field-for-field, and the batch planner must cover every pending
+spec exactly once without mixing groups.
+
+The seeded suites draw through tests/_seeds.py (``UMBENCH_TEST_SEED=N``
+shifts the samples); hypothesis variants deepen the search when the
+dev-only extra is installed.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection must not error (dev-only dependency)
+    from _hypothesis_fallback import given, settings, st
+
+from _seeds import seed_note, seeded_rng
+
+from repro.umbench import harness
+from repro.umbench.harness import (
+    BATCH_MAX,
+    _plan_batches,
+    _run_spec_batch,
+    matrix_specs,
+)
+
+# the cheap corner of the matrix: two small apps, the smallest platform,
+# both granularities — enough to exercise eviction and page mode without
+# turning tier-1 into a sweep
+_APPS = ("bs", "cublas")
+_PLATS = ("intel-pascal-pcie",)
+_REGIMES = ("in_memory", "oversubscribed")
+_POOL = [s
+         for gran in ("group", "page")
+         for s in matrix_specs(apps=_APPS, platform_names=_PLATS,
+                               regimes=_REGIMES, granularity=gran)]
+
+
+def _group_key(spec):
+    return (spec[1], spec[3], spec[4])
+
+
+# ---------------------------------------------------------------------------
+# the batch planner
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_plan_batches_covers_every_spec_once(seed):
+    rng = seeded_rng(seed)
+    n = rng.randrange(1, 40)
+    specs = [rng.choice(_POOL) for _ in range(n)]
+    pending = sorted(rng.sample(range(n), rng.randrange(1, n + 1)))
+    workers = rng.choice([1, 2, 4])
+    batches = _plan_batches(pending, specs, workers)
+    flat = [i for b in batches for i in b]
+    assert sorted(flat) == pending, seed_note(seed)
+    for b in batches:
+        assert 1 <= len(b) <= BATCH_MAX, seed_note(seed)
+        keys = {_group_key(specs[i]) for i in b}
+        assert len(keys) == 1, seed_note(seed)   # never mixes groups
+
+
+def test_plan_batches_preserves_group_order():
+    specs = [("bs", "p", "um", "r", "g")] * 6
+    batches = _plan_batches([0, 2, 3, 5], specs, workers=1)
+    assert [i for b in batches for i in b] == [0, 2, 3, 5]
+
+
+def test_run_spec_batch_is_plain_composition():
+    calls = []
+
+    def runner(spec):
+        calls.append(spec)
+        return ("ran", spec)
+
+    out = _run_spec_batch((runner, ["a", "b", "c"]))
+    assert out == [("ran", "a"), ("ran", "b"), ("ran", "c")]
+    assert calls == ["a", "b", "c"]
+
+
+# ---------------------------------------------------------------------------
+# batched == sequential, field for field
+# ---------------------------------------------------------------------------
+
+def _assert_rows_equal(batched, sequential, note):
+    assert len(batched) == len(sequential), note
+    for b, s in zip(batched, sequential):
+        rb, rs = b.row(), s.row()
+        assert set(rb) == set(rs), note
+        for field in rb:
+            assert rb[field] == rs[field], f"{field}: {rb[field]!r} != " \
+                                           f"{rs[field]!r} ({note})"
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_batched_vs_sequential_randomized(seed):
+    """A seeded sample of page+group cells through the real pool (workers=2
+    forces multi-spec batches) against the in-process sequential runner."""
+    rng = seeded_rng(seed)
+    specs = rng.sample(_POOL, 10)
+    batched = harness.run_specs(specs, workers=2)
+    sequential = [harness._run_cell_spec(s) for s in specs]
+    _assert_rows_equal(batched, sequential, seed_note(seed))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.sampled_from(_POOL), min_size=1, max_size=6))
+def test_batched_vs_sequential_hypothesis(specs):
+    batched = harness.run_specs(specs, workers=2)
+    sequential = [harness._run_cell_spec(s) for s in specs]
+    _assert_rows_equal(batched, sequential, "hypothesis sample")

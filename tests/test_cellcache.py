@@ -1,0 +1,242 @@
+"""Content-addressed cell cache (DESIGN.md §15, ISSUE 9).
+
+Every invalidation lever gets a poisoning test: a corrupted on-disk record,
+a changed workload trace, a renamed strategy param, and a touched engine
+file must each force a re-run (with the right keyed miss reason) instead
+of replaying a stale record.  The hit path is pinned bit-identical to the
+sequential runner, and composition with the crash-resume journal
+(journal-first resolution, journal hits converging into the cache) is
+covered end to end through ``harness.run_specs``.
+"""
+import json
+import os
+
+import pytest
+
+from repro.umbench import harness
+from repro.umbench import variants as var
+from repro.umbench.cellcache import (
+    MISS_CODE_REV,
+    MISS_INPUT_CHANGE,
+    MISS_NEW_CELL,
+    MISS_REASONS,
+    CellCache,
+    _reset_code_rev,
+    _strategy_fingerprint,
+    _TRACE_MEMO,
+    code_rev,
+    spec_fingerprint,
+)
+from repro.umbench.harness import _spec_key
+from repro.umbench.journal import SweepJournal
+
+SPEC = ("bs", "intel-pascal-pcie", "um", "in_memory", "group")
+
+
+@pytest.fixture(autouse=True)
+def _clean_trace_memo():
+    """The trace memo is process-global; poisoning tests that perturb
+    workload builders must never leak digests across tests."""
+    _TRACE_MEMO.clear()
+    yield
+    _TRACE_MEMO.clear()
+
+
+def _run_and_record(tmp_path, spec=SPEC):
+    cache = CellCache(tmp_path)
+    cell = harness._run_cell_spec(spec)
+    fp = spec_fingerprint(spec)
+    cache.record(cell, fp)
+    return cache, cell, fp
+
+
+# ---------------------------------------------------------------------------
+# hit path: bit-identical replay
+# ---------------------------------------------------------------------------
+
+def test_hit_replays_bit_identical(tmp_path):
+    cache, cell, fp = _run_and_record(tmp_path)
+    got = cache.lookup(_spec_key(SPEC), fp)
+    assert got is not None
+    assert got.row() == cell.row()
+    # full-precision fields, not just the rounded row
+    assert got.report.total_s == cell.report.total_s
+    assert got.report.n_faults == cell.report.n_faults
+    assert cache.stats() == {"hits": 1, "misses": {}}
+    assert cache.hit_keys == {_spec_key(SPEC)}
+
+
+def test_unknown_cell_is_new_cell_miss(tmp_path):
+    cache = CellCache(tmp_path)
+    assert cache.lookup(_spec_key(SPEC), "whatever") is None
+    assert cache.stats()["misses"] == {MISS_NEW_CELL: 1}
+
+
+# ---------------------------------------------------------------------------
+# poisoning: every invalidation lever must force a re-run
+# ---------------------------------------------------------------------------
+
+def test_corrupt_record_byte_invalidates(tmp_path):
+    cache, cell, fp = _run_and_record(tmp_path)
+    [rec] = os.listdir(tmp_path)
+    path = os.path.join(tmp_path, rec)
+    raw = bytearray(open(path, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF          # flip one byte mid-record
+    with open(path, "wb") as f:
+        f.write(bytes(raw))
+    fresh = CellCache(tmp_path)
+    assert fresh.lookup(_spec_key(SPEC), fp) is None
+    assert fresh.stats()["misses"] == {MISS_NEW_CELL: 1}
+
+
+def test_foreign_key_record_invalidates(tmp_path):
+    """A record whose embedded key disagrees with its filename identity
+    (a hand-edited or collided file) never replays."""
+    cache, cell, fp = _run_and_record(tmp_path)
+    [rec] = os.listdir(tmp_path)
+    path = os.path.join(tmp_path, rec)
+    with open(path) as f:
+        record = json.load(f)
+    record["key"][0] = "cublas"
+    with open(path, "w") as f:
+        json.dump(record, f)
+    fresh = CellCache(tmp_path)
+    assert fresh.lookup(_spec_key(SPEC), fp) is None
+    assert fresh.stats()["misses"] == {MISS_NEW_CELL: 1}
+
+
+def test_workload_trace_change_invalidates(tmp_path, monkeypatch):
+    """Perturbing the workload builder (one different byte in the trace
+    repr) changes the input fingerprint: the record misses as
+    input-change, never replays."""
+    cache, cell, fp = _run_and_record(tmp_path)
+    build = harness.WORKLOADS["bs"]
+    monkeypatch.setitem(harness.WORKLOADS, "bs",
+                        lambda total: build(total + 4096))
+    _TRACE_MEMO.clear()
+    fp2 = spec_fingerprint(SPEC)
+    assert fp2 != fp
+    fresh = CellCache(tmp_path)
+    assert fresh.lookup(_spec_key(SPEC), fp2) is None
+    assert fresh.stats()["misses"] == {MISS_INPUT_CHANGE: 1}
+
+
+def test_strategy_param_rename_invalidates(tmp_path):
+    """Renaming a strategy's configuration attribute — value unchanged —
+    still changes its fingerprint (the params are part of the identity);
+    a strategy with no params is covered by *adding* one."""
+    cache, cell, fp = _run_and_record(tmp_path)
+    strat = var.get_strategy(SPEC[2])
+    d = vars(strat)                     # the live instance __dict__
+    before = _strategy_fingerprint(strat)
+    if d:
+        orig = sorted(d)[0]
+        value = d.pop(orig)
+        d[orig + "_renamed"] = value
+        restore = {orig: value}
+        added = orig + "_renamed"
+    else:
+        d["new_param"] = 1
+        restore = {}
+        added = "new_param"
+    try:
+        assert _strategy_fingerprint(strat) != before
+        fp2 = spec_fingerprint(SPEC)
+        assert fp2 != fp
+        fresh = CellCache(tmp_path)
+        assert fresh.lookup(_spec_key(SPEC), fp2) is None
+        assert fresh.stats()["misses"] == {MISS_INPUT_CHANGE: 1}
+    finally:
+        d.pop(added, None)
+        d.update(restore)
+
+
+def test_touch_engine_file_invalidates(tmp_path):
+    """A new (or edited) .py file under src/repro/core changes the code-rev
+    digest: every cached cell misses as code-rev."""
+    import repro.core
+    root = os.path.dirname(os.path.abspath(repro.core.__file__))
+    probe = os.path.join(root, "_cache_poison_probe.py")
+    cache, cell, fp = _run_and_record(tmp_path)
+    rev_before = code_rev()
+    try:
+        with open(probe, "w") as f:
+            f.write("# cache poisoning probe (test artifact)\n")
+        _reset_code_rev()
+        assert code_rev() != rev_before
+        fresh = CellCache(tmp_path)
+        assert fresh.lookup(_spec_key(SPEC), fp) is None
+        assert fresh.stats()["misses"] == {MISS_CODE_REV: 1}
+    finally:
+        os.remove(probe)
+        _reset_code_rev()
+    assert code_rev() == rev_before
+
+
+def test_explicit_rev_override_misses_as_code_rev(tmp_path):
+    cache, cell, fp = _run_and_record(tmp_path)
+    stale = CellCache(tmp_path, rev="not-the-rev")
+    assert stale.lookup(_spec_key(SPEC), fp) is None
+    assert stale.stats()["misses"] == {MISS_CODE_REV: 1}
+
+
+# ---------------------------------------------------------------------------
+# record contract
+# ---------------------------------------------------------------------------
+
+def test_error_cells_never_cached(tmp_path):
+    cache = CellCache(tmp_path)
+    cell = harness.CellResult("bs", "intel-pascal-pcie", "um", "in_memory",
+                              None, "group", None, "timeout after 1s")
+    cache.record(cell, "fp")
+    assert os.listdir(tmp_path) == []
+
+
+def test_miss_reasons_are_closed_set():
+    assert set(MISS_REASONS) == {MISS_NEW_CELL, MISS_CODE_REV,
+                                 MISS_INPUT_CHANGE}
+
+
+# ---------------------------------------------------------------------------
+# run_specs composition: cold populate -> warm all-hit; journal-first
+# ---------------------------------------------------------------------------
+
+def test_run_specs_cold_then_warm_bit_identical(tmp_path):
+    specs = harness.matrix_specs(
+        apps=["bs"], platform_names=["intel-pascal-pcie"],
+        regimes=["in_memory", "oversubscribed"], granularity="page")
+    c1 = CellCache(tmp_path)
+    cold = harness.run_specs(specs, workers=2, cache=c1)
+    assert c1.stats()["hits"] == 0
+    assert sum(c1.stats()["misses"].values()) == len(specs)
+    c2 = CellCache(tmp_path)
+    warm = harness.run_specs(specs, workers=2, cache=c2)
+    assert c2.stats() == {"hits": len(specs), "misses": {}}
+    assert [c.row() for c in warm] == [c.row() for c in cold]
+
+
+def test_journal_hit_wins_and_converges_into_cache(tmp_path):
+    """Resume semantics compose: a journal-replayed cell is not re-run AND
+    gets re-recorded into the cache, so the next cacheful run hits even
+    though the journaled run never consulted the cache for it."""
+    specs = harness.matrix_specs(
+        apps=["bs"], platform_names=["intel-pascal-pcie"],
+        regimes=["in_memory"], granularity="group")
+    jp = os.path.join(tmp_path, "sweep.jsonl")
+    j1 = SweepJournal(jp)
+    first = harness.run_specs(specs, workers=1, journal=j1)
+    j1.close()
+    j2 = SweepJournal(jp, resume=True)
+    cache = CellCache(os.path.join(tmp_path, "cache"))
+    second = harness.run_specs(specs, workers=1, journal=j2, cache=cache)
+    j2.close()
+    assert j2.reused == len(specs)
+    # journal answered first: no cache lookups tallied, but the cells were
+    # recorded — a third, journal-less run is all cache hits
+    assert cache.stats() == {"hits": 0, "misses": {}}
+    c3 = CellCache(os.path.join(tmp_path, "cache"))
+    third = harness.run_specs(specs, workers=1, cache=c3)
+    assert c3.stats()["hits"] == len(specs)
+    rows = [c.row() for c in first]
+    assert [c.row() for c in second] == rows
+    assert [c.row() for c in third] == rows

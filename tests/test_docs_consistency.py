@@ -31,7 +31,7 @@ def doc_table_names(path: Path, header: str) -> set[str]:
             continue
         if not in_table or set(first) <= {"-", ":", " "}:   # separator row
             continue
-        m = re.fullmatch(r"`([A-Za-z0-9_]+)`", first)
+        m = re.fullmatch(r"`([A-Za-z0-9_-]+)`", first)
         if m:
             names.add(m.group(1))
     return names
@@ -83,6 +83,19 @@ def test_analysis_rule_tables_match_registered_rules():
         f"DESIGN.md rule tables diverge from the registered rule sets: "
         f"undocumented={sorted(registered - documented)}, "
         f"stale={sorted(documented - registered)}")
+
+
+def test_cache_miss_reason_table_matches_registry():
+    """DESIGN.md §15's invalidation table lists exactly the cell cache's
+    keyed miss reasons (the ISSUE 9 analogue of the rule-table gate) —
+    and they are the reasons ``cache_report`` tallies in the artifact."""
+    from repro.umbench.cellcache import MISS_REASONS
+    documented = doc_table_names(REPO / "DESIGN.md", "miss reason")
+    assert documented, "DESIGN.md: no miss-reason table found"
+    assert documented == set(MISS_REASONS), (
+        f"DESIGN.md miss-reason table diverges from cellcache.MISS_REASONS: "
+        f"undocumented={sorted(set(MISS_REASONS) - documented)}, "
+        f"stale={sorted(documented - set(MISS_REASONS))}")
 
 
 def test_audit_invariant_table_matches_registry():

@@ -349,3 +349,96 @@ def test_compaction_preserves_order():
     assert sv.residency_snapshot() == _seed_snapshot(ss)
     # entry storage stayed bounded (compaction actually ran)
     assert sv._index.un.tail - sv._index.un.head <= 64
+
+
+# ---------------------------------------------------------------------------
+# remove_runs: the batched un-filing on the hot eviction path (ISSUE 9).
+# Red-before/green-after: before the batch-run-replacement change the index
+# had no remove_runs at all (evictions paid one RunQueue.remove per victim
+# run), so these tests fail on the old code by construction; on the new
+# code they pin remove_runs to the sequential semantics it replaced.
+# ---------------------------------------------------------------------------
+
+def _legacy_remove_runs(index, regions, regs, starts, cnts):
+    """The pre-batching reference: one RunQueue.remove per victim run
+    (verbatim semantics of the removed `_index_remove_run` helper)."""
+    for k in range(len(regs)):
+        r = regions[int(regs[k])]
+        s, c = int(starts[k]), int(cnts[k])
+        e0 = int(r.entry_ptr[s])
+        r.entry_ptr[s:s + c] = -1
+        qi = e0 & 1
+        q = index.pin if qi else index.un
+        q.remove(e0 >> 1, c, s, s + c - 1)
+        r.q_live[qi] -= c
+
+
+def _index_state(sim):
+    state = []
+    for q in (sim._index.un, sim._index.pin):
+        h, t = q.head, q.tail
+        state.append((h, t, q.live_chunks, q.live_bytes,
+                      q.reg[h:t].tolist(), q.start[h:t].tolist(),
+                      q.length[h:t].tolist(), q.nlive[h:t].tolist(),
+                      q.csize[h:t].tolist()))
+    for r in sim._rlist:
+        state.append((r.name, r.entry_ptr.tolist(), list(r.q_live)))
+    return state
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_remove_runs_matches_sequential_remove(seed):
+    """Batched un-filing == one RunQueue.remove per run, on randomized
+    scenarios: same entry windows, same counters, same pop order."""
+    rng = seeded_rng(4000 + seed)
+    note = seed_note(4000 + seed)
+    plat, ops = _random_scenario(rng, coherent=seed % 2 == 0)
+    sims = []
+    for _ in range(2):
+        sim = vec.UMSimulator(plat)
+        for op in ops:
+            try:
+                _apply(sim, op)
+            except OversubscriptionError:
+                break
+        sims.append(sim)
+    a, b = sims
+    assert _index_state(a) == _index_state(b), note   # identical builds
+    pop = a._pop_runs()
+    if pop is None:
+        return
+    regs, starts, cnts, csz, _ = pop
+    if not len(regs):
+        return
+    # cut the victim prefix mid-run, exactly like _plan_victims does
+    j = rng.randrange(len(regs))
+    cnts = cnts[:j + 1].copy()
+    cnts[j] = rng.randint(1, int(cnts[j]))
+    regs, starts = regs[:j + 1], starts[:j + 1]
+    a._index.remove_runs(a._rlist, regs, starts, cnts)
+    _legacy_remove_runs(b._index, b._rlist, regs, starts, cnts)
+    assert _index_state(a) == _index_state(b), note
+    assert a.residency_snapshot() == b.residency_snapshot(), note
+
+
+def test_eviction_unfiles_through_remove_runs(monkeypatch):
+    """The oversubscribed eviction path actually takes the batched call
+    (red before the change: the method did not exist)."""
+    from repro.core.residency import ResidencyIndex
+    calls = []
+    orig = ResidencyIndex.remove_runs
+
+    def counting(self, regions, regs, starts, cnts):
+        calls.append(len(regs))
+        return orig(self, regions, regs, starts, cnts)
+
+    monkeypatch.setattr(ResidencyIndex, "remove_runs", counting)
+    sim = vec.UMSimulator(PCIE)
+    sim.alloc("a", 80 * MB)
+    sim.alloc("b", 80 * MB)
+    sim.host_write("a")
+    sim.host_write("b")
+    sim.prefetch("a", MemorySpace.DEVICE)
+    sim.prefetch("b", MemorySpace.DEVICE)      # evicts a's chunks
+    sim._debug_validate()
+    assert calls and all(n >= 1 for n in calls)
