@@ -9,10 +9,14 @@ Emits, as CSV blocks:
   ext           extended sweep (grace-hopper-c2c + 200 % regime) [not --fast]
   psched        staged vs pipelined prefetch scheduling (§11) [not --fast]
   page          full-matrix 64 KB page-granularity sweep [not --fast]
+  pagegate      §16 bounds gate over the page sweep (own timed block, so
+                page_matrix_wall_s keeps measuring the sweep) [not --fast]
   degradation   injected-fault scenarios x adaptive-vs-static tiers (§12)
                 [not --fast]
   serving       continuous-batching serving tier: traffic x variant x KV
                 regime latency/goodput (§13) [not --fast]
+  boundstight   static-bounds tightness: measured-vs-provable-bound ratios
+                per platform x regime x strategy kind (§16) [not --fast]
   table1        working-set sizing
   lm            per-arch reduced train/decode step timings (real CPU)
   kernel        Pallas-kernel call timings (interpret mode) vs jnp oracle
@@ -209,8 +213,10 @@ def main() -> None:
         timed("ext", paper_tables.table_extended_sweep)
         timed("psched", paper_tables.table_prefetch_pipeline)
         timed("page", paper_tables.table_page_granularity)
+        timed("pagegate", paper_tables.table_page_bounds_gate)
         timed("degradation", paper_tables.table_degradation)
         timed("serving", paper_tables.table_serving)
+        timed("boundstight", paper_tables.table_bounds_tightness)
         timed("kernel", lm_bench.kernel_rows)
         timed("lm", lm_bench.arch_step_rows)
     timed("roofline", roofline.roofline_rows)
@@ -267,6 +273,15 @@ def main() -> None:
                               for k, (r, n)
                               in paper_tables.JOURNAL_STATS.items()},
             "cache_report": paper_tables.CACHE_STATS,
+            # static bounds gate (§16): per-sweep checked/violation tallies,
+            # plus artifact-wide totals — the committed artifact is pinned
+            # to bounds_violations == 0 by tests/test_bench_artifact.py
+            "bounds_report": dict(paper_tables.BOUNDS_STATS),
+            "bounds_checked": sum(v["checked"]
+                                  for v in paper_tables.BOUNDS_STATS.values()),
+            "bounds_violations": sum(
+                v["violations"]
+                for v in paper_tables.BOUNDS_STATS.values()),
             "cells": rows,
         }
         # clean (faults=None) cache-hit cells, projected onto the 5-field

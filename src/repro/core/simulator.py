@@ -630,6 +630,39 @@ class UMSimulator:
             self._index.queue(qi).remove(e0 >> 1, n, lo, hi)
             r.q_live[qi] -= n
             return
+        if n > 1 and int(ids[-1]) - int(ids[0]) == n - 1:
+            # contiguous multi-entry window (the bulk-eviction shape):
+            # entry codes along the window are piecewise-constant runs —
+            # an entry's span is contiguous, so its members inside a
+            # contiguous window form consecutive blocks.  Group at run
+            # boundaries and aggregate per code instead of gathering and
+            # argsorting the (possibly megachunk) window; the per-entry
+            # (cnt, id_min, id_max) triples — and the sorted-code call
+            # order — are exactly the scatter path's.
+            s0 = int(ids[0])
+            enc = r.entry_ptr[s0:s0 + n]
+            cuts = np.flatnonzero(np.diff(enc) != 0) + 1
+            starts = np.concatenate([[0], cuts])
+            ends = np.concatenate([cuts, [n]])
+            codes = enc[starts]
+            if clear:
+                r.entry_ptr[s0:s0 + n] = -1
+            groups: dict[int, list] = {}
+            for a, b, e in zip(starts.tolist(), ends.tolist(),
+                               codes.tolist(), strict=True):
+                g = groups.get(e)
+                if g is None:
+                    groups[e] = [b - a, a, b]
+                else:
+                    g[0] += b - a
+                    g[2] = b
+            for e in sorted(groups):
+                cnt, a, b = groups[e]
+                qi = e & 1
+                self._index.queue(qi).remove(e >> 1, cnt, s0 + a,
+                                             s0 + b - 1)
+                r.q_live[qi] -= cnt
+            return
         enc = r.entry_ptr[ids]
         if clear:
             r.entry_ptr[ids] = -1

@@ -8,9 +8,21 @@ Three passes, one CLI (``python -m repro.umbench.analysis``):
 * :func:`check_contracts` — platform-gate and hook-whitelist contracts
   UMC101-UMC104 over every registered variant strategy;
 * :func:`check_invariants` — the opt-in runtime audit behind
-  ``UMSimulator(..., audit=True)``.
+  ``UMSimulator(..., audit=True)``;
+* :func:`workload_bounds` / :func:`ops_bounds` / :func:`verify_cell` —
+  umbound, the symbolic residency abstract interpretation deriving
+  provable per-cell fault/transfer bounds (DESIGN.md §16).
 """
 from repro.umbench.analysis.audit import AuditError, INVARIANTS, check_invariants
+from repro.umbench.analysis.bounds import (
+    QUANTITIES,
+    AbstractSim,
+    CellBounds,
+    bounds_for_cell,
+    ops_bounds,
+    verify_cell,
+    workload_bounds,
+)
 from repro.umbench.analysis.contracts import (
     CONTRACT_RULES,
     EXPECTED_GATES,
@@ -26,19 +38,26 @@ from repro.umbench.analysis.trace import (
 )
 
 __all__ = [
+    "AbstractSim",
     "AuditError",
     "CONTRACT_RULES",
+    "CellBounds",
     "EXPECTED_GATES",
     "Finding",
     "INVARIANTS",
     "Op",
+    "QUANTITIES",
     "RULES",
     "RecordingSim",
     "SANCTIONED_HOOK_OPS",
+    "bounds_for_cell",
     "check_contracts",
     "check_invariants",
     "lint_ops",
     "lint_workload",
+    "ops_bounds",
     "record_serving_ops",
     "to_lint_ops",
+    "verify_cell",
+    "workload_bounds",
 ]

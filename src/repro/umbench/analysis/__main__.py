@@ -9,8 +9,14 @@
 * ``--contracts``  check every registered strategy's platform gate and
                    hook whitelist (UMC rules).
 
-Exit status is 1 when any error-severity finding is reported, and — under
-``--strict`` — when any workload/contract finding is reported at all.
+``--bounds`` (opt-in, not part of the default run) derives static transfer
+bounds for every builtin-app cell of the extended matrix plus a kv_150
+serving cell and cross-checks the measured counters (DESIGN.md §16).
+
+Exit status: 1 when any error-severity finding (or bounds violation) is
+reported; 2 when — under ``--strict`` — only strict-armed warnings were
+found (no errors); 0 otherwise.  The distinct codes let CI treat "the
+traces are broken" and "the traces are untidy" differently.
 Serving-trace warnings stay non-fatal even under ``--strict``: the
 request-driven lifecycle retires regions asynchronously, so a block
 allocated just before its request completes is a timing artifact, not a
@@ -70,6 +76,45 @@ def _print(label: str, findings) -> None:
         print(f"{label}: {f}")
 
 
+#: the serving cell the bounds pass cross-checks (an oversubscribed
+#: migrating cell: the widened abstract domain, not just the exact phase)
+BOUNDS_SERVING_CELL = ("poisson_short", "um", "p9-volta-nvlink", "kv_150")
+
+
+def check_bounds(granularity: str = "group") -> tuple[int, int]:
+    """Derive and cross-check static bounds (DESIGN.md §16) over every
+    builtin-app cell of the extended matrix, plus one oversubscribed
+    serving cell.  Returns (cells checked, violations); each violation is
+    printed as it is found."""
+    from repro.umbench import harness
+    from repro.umbench.serving.sweep import run_serving_cell
+    checked = violations = 0
+    for app in sorted(harness.WORKLOADS):
+        for pname in harness.EXTENDED_PLATFORMS:
+            for regime in harness.EXTENDED_REGIMES:
+                for variant in harness.EXTENDED_VARIANTS:
+                    cell = harness.run_cell(app, variant, pname, regime,
+                                            granularity, bounds=True)
+                    if cell.error_kind == "bounds":
+                        violations += 1
+                        checked += 1
+                        print(f"{app}:{pname}:{variant}:{regime}: "
+                              f"{cell.error}")
+                    elif cell.report is not None:
+                        checked += 1
+    pattern, strategy, platform, regime = BOUNDS_SERVING_CELL
+    cell = run_serving_cell(pattern, strategy, platform, regime,
+                            granularity, bounds=True)
+    if cell.error_kind == "bounds":
+        violations += 1
+        checked += 1
+        print(f"serve_{pattern}:{platform}:{strategy}:{regime}: "
+              f"{cell.error}")
+    elif cell.report is not None:
+        checked += 1
+    return checked, violations
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.umbench.analysis",
@@ -82,6 +127,10 @@ def main(argv=None) -> int:
                     help="check strategy platform-gate and hook contracts")
     ap.add_argument("--strict", action="store_true",
                     help="fail on warnings too (serving warnings excepted)")
+    ap.add_argument("--bounds", action="store_true",
+                    help="derive static transfer bounds for the builtin-app "
+                         "matrix (+ a serving cell) and cross-check the "
+                         "measured counters")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalog and audit invariants")
     args = ap.parse_args(argv)
@@ -94,29 +143,43 @@ def main(argv=None) -> int:
             print(f"audit   invariant  {inv}")
         return 0
 
+    if args.bounds:
+        b_checked, b_viol = check_bounds()
+        print(f"umbound: {b_checked} cells checked, "
+              f"{b_viol} violation(s)")
+        return 1 if b_viol else 0
+
     run_all = not (args.all_apps or args.serving or args.contracts)
-    fatal = 0
+    errors = 0
+    strict_warnings = 0
     checked = 0
     if args.all_apps or run_all:
         for label, findings in lint_all_apps():
             checked += 1
             _print(label, findings)
-            fatal += sum(1 for f in findings
-                         if f.severity == "error" or args.strict)
+            errors += sum(1 for f in findings if f.severity == "error")
+            if args.strict:
+                strict_warnings += sum(1 for f in findings
+                                       if f.severity != "error")
     if args.serving or run_all:
         for label, findings in lint_serving():
             checked += 1
             _print(label, findings)
-            fatal += sum(1 for f in findings if f.severity == "error")
+            errors += sum(1 for f in findings if f.severity == "error")
     if args.contracts or run_all:
         findings = contracts.check_contracts()
         checked += len(contracts.EXPECTED_GATES)
         _print("contracts", findings)
-        fatal += sum(1 for f in findings
-                     if f.severity == "error" or args.strict)
+        errors += sum(1 for f in findings if f.severity == "error")
+        if args.strict:
+            strict_warnings += sum(1 for f in findings
+                                   if f.severity != "error")
+    fatal = errors + strict_warnings
     print(f"umlint: {checked} subjects checked, "
           f"{fatal} fatal finding(s)")
-    return 1 if fatal else 0
+    # errors are exit 1; strict-armed warnings alone are exit 2 — distinct,
+    # so CI can treat broken traces and untidy traces differently
+    return 1 if errors else (2 if strict_warnings else 0)
 
 
 if __name__ == "__main__":

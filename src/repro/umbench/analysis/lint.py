@@ -33,7 +33,19 @@ UML008    warning   PRE_INIT advise on a region never host-written during
 UML009    warning   oversubscription-unreachable: the cell expects
                     eviction pressure but peak live bytes fit in device
                     memory
+UML010    warning   staged prefetch window provably exceeds device
+                    capacity at its anchor (self-evicting; the pipelined
+                    schedule clamps, so it is exempt)
+UML011    warning   advise hint provably dead under the platform/strategy
+                    gate table (ACCESSED_BY(DEVICE) is never consulted;
+                    ACCESSED_BY(HOST) needs host_can_access_device;
+                    PREFERRED_LOCATION(HOST) needs device_can_access_host)
 ========  ========  =====================================================
+
+UML010/UML011 ride the same abstract gate tables as ``analysis.bounds``
+and need cell context — they arm only when ``strategy=``/``platform=``
+are passed (the builtin-app sweep lints workloads without a cell, so they
+stay quiet there).
 
 Severities: ``error`` findings describe traces the engine will reject or
 mis-serve (KeyErrors, wasted copies); ``warning`` findings describe dead
@@ -66,6 +78,10 @@ RULES: dict[str, tuple[str, str]] = {
                           "during setup"),
     "UML009": ("warning", "oversubscription-unreachable: peak live bytes "
                           "fit in device memory"),
+    "UML010": ("warning", "staged prefetch window provably exceeds device "
+                          "capacity at its anchor (self-evicting)"),
+    "UML011": ("warning", "advise hint provably dead under the "
+                          "platform/strategy gate table"),
 }
 
 
@@ -99,8 +115,12 @@ def _finding(rule: str, idx: int, region: str | None, msg: str) -> Finding:
 #   ("alloc", name, nbytes)          region comes to life
 #   ("free", name)                   region lifetime ends
 #   ("kernel", kname, reads, writes) one launch with its touch sets
-#   ("advise", name, kind)           kind in {"read_mostly",
-#                                    "preferred_location", "accessed_by"}
+#   ("advise", name, kind[, detail]) kind in {"read_mostly",
+#                                    "preferred_location", "accessed_by"};
+#                                    detail (optional, for the gate rules)
+#                                    is the MemorySpace/Accessor name
+#                                    ("DEVICE"/"HOST") — 3-tuples from
+#                                    older recorders still lint
 #   ("prefetch", name)               an explicit prefetch call
 #   ("use", name, label)             any other region reference (host I/O,
 #                                    unadvise, counters, explicit staging)
@@ -158,7 +178,7 @@ class _Dataflow:
                     self.kernel_touched.add(name)
                     self.pending_advise.pop(name, None)
         elif op == "advise":
-            _, name, kind = ev
+            name, kind = ev[1], ev[2]
             if self._ref(idx, name, f"{kind} advise") and kind in (
                     "read_mostly", "preferred_location"):
                 self.pending_advise.setdefault(name, []).append((idx, kind))
@@ -190,20 +210,120 @@ class _Dataflow:
                 f"cell expects oversubscription but peak live bytes "
                 f"({self.peak_bytes}) fit device memory ({capacity})"))
         return sorted(self.findings, key=lambda f: (max(f.step_idx, 0),
-                                                    f.rule_id))
+                                                    f.rule_id,
+                                                    f.region or ""))
+
+
+# -- the context-armed gate rules (UML010/UML011) ------------------------------
+
+def _resolve_cell(strategy, platform):
+    """(StrategySummary, SimPlatform) from names or objects; (None, None)
+    components when the corresponding context was not provided."""
+    summary = None
+    if strategy is not None:
+        from repro.umbench import variants as var
+        strat = (var.get_strategy(strategy) if isinstance(strategy, str)
+                 else strategy)
+        summary = strat.static_summary()
+    p = None
+    if platform is not None:
+        from repro.umbench import platforms as plat
+        p = plat.PLATFORMS[platform] if isinstance(platform, str) else platform
+    return summary, p
+
+
+def _dead_advise_findings(events, summary, p) -> list[Finding]:
+    """UML011: advise hints the engine provably never honors on this cell —
+    read straight off the simulator's gate table.  ACCESSED_BY(DEVICE) has
+    no consumer at all (only ``Accessor.HOST`` is consulted, by the host
+    I/O remote path); ACCESSED_BY(HOST) needs ``host_can_access_device``;
+    PREFERRED_LOCATION(HOST)'s remote-read path needs
+    ``device_can_access_host``.  Detail-less 3-tuple advise events carry no
+    space/accessor, so they are never flagged."""
+    out: list[Finding] = []
+    if p is None or (summary is not None and not summary.issues_advises):
+        # a non-advising strategy never issues the hints: nothing to check
+        # (lint_workload still reports them as pending via UML005)
+        return out
+    for idx, ev in events:
+        if ev[0] != "advise" or len(ev) < 4 or ev[3] is None:
+            continue
+        name, kind, detail = ev[1], ev[2], ev[3]
+        if kind == "accessed_by":
+            if detail == "DEVICE":
+                out.append(_finding(
+                    "UML011", idx, name,
+                    f"ACCESSED_BY(DEVICE) advise on {name!r}: the engine "
+                    f"never consults device accessors — the hint is dead "
+                    f"on every platform"))
+            elif detail == "HOST" and not p.host_can_access_device:
+                out.append(_finding(
+                    "UML011", idx, name,
+                    f"ACCESSED_BY(HOST) advise on {name!r} is dead on "
+                    f"{p.name}: the remote host-I/O path needs "
+                    f"host_can_access_device"))
+        elif (kind == "preferred_location" and detail == "HOST"
+              and not p.device_can_access_host):
+            out.append(_finding(
+                "UML011", idx, name,
+                f"PREFERRED_LOCATION(HOST) advise on {name!r} is dead on "
+                f"{p.name}: the device remote-read path needs "
+                f"device_can_access_host"))
+    return out
+
+
+def _staged_window_findings(workload: wk.Workload, summary, p,
+                            capacity: int | None,
+                            granularity: str) -> list[Finding]:
+    """UML010: the staged schedule copies the whole prefetch pool at the
+    staging anchor; if the pool's ceil-chunk bytes exceed device capacity
+    the window provably self-evicts (the pipelined schedule derives clamped
+    windows via ``schedule.derive_plan``, so only ``prefetch == "staged"``
+    strategies are flagged)."""
+    if summary is None or summary.prefetch != "staged":
+        return []
+    if capacity is None:
+        if p is None:
+            return []
+        from repro.core.simulator import GB
+        capacity = int(p.device_mem_gb * GB)
+    chunk = 2 * 1024 * 1024
+    if p is not None:
+        chunk = (p.page_bytes if granularity == "page"
+                 else p.fault_group_bytes)
+    sizes = {s.name: s.nbytes for s in workload.setup
+             if isinstance(s, wk.Alloc)}
+    pool = [n for n in workload.prefetch if n in sizes]
+    pool_bytes = sum(max(1, -(-int(sizes[n]) // chunk)) * chunk
+                     for n in pool)
+    if pool_bytes <= capacity:
+        return []
+    anchor = len(workload.setup)
+    return [_finding(
+        "UML010", anchor, None,
+        f"staged prefetch pool {sorted(pool)} is {pool_bytes} ceil-chunk "
+        f"bytes at its anchor, exceeding device capacity ({capacity}) — "
+        f"the window provably self-evicts; use the pipelined schedule")]
 
 
 # -- entry points --------------------------------------------------------------
 
 def lint_ops(ops, *, capacity: int | None = None,
-             expect_oversubscription: bool = False) -> list[Finding]:
+             expect_oversubscription: bool = False,
+             strategy=None, platform=None) -> list[Finding]:
     """Lint a recorded op stream (see the event vocabulary above);
-    ``step_idx`` in the findings is the op's stream position."""
+    ``step_idx`` in the findings is the op's stream position.
+    ``strategy``/``platform`` (names or objects) arm the context-dependent
+    gate rule UML011 — without them only the context-free rules run."""
     df = _Dataflow()
     for idx, ev in enumerate(ops):
         df.event(idx, ev)
-    return df.finish(capacity=capacity,
-                     expect_oversubscription=expect_oversubscription)
+    findings = df.finish(capacity=capacity,
+                         expect_oversubscription=expect_oversubscription)
+    summary, p = _resolve_cell(strategy, platform)
+    findings.extend(_dead_advise_findings(enumerate(ops), summary, p))
+    return sorted(findings, key=lambda f: (max(f.step_idx, 0), f.rule_id,
+                                           f.region or ""))
 
 
 _ADVISE_KIND = {
@@ -211,6 +331,16 @@ _ADVISE_KIND = {
     Advise.PREFERRED_LOCATION: "preferred_location",
     Advise.ACCESSED_BY: "accessed_by",
 }
+
+
+def _advise_detail(directive) -> str | None:
+    """The gate-rule detail of an advise directive: the MemorySpace /
+    Accessor name ("DEVICE"/"HOST"), None for READ_MOSTLY."""
+    if directive.advise is Advise.PREFERRED_LOCATION:
+        return directive.location.name
+    if directive.advise is Advise.ACCESSED_BY:
+        return directive.accessor.name
+    return None
 
 
 def _compile(workload: wk.Workload) -> list[tuple[int, tuple]]:
@@ -228,7 +358,8 @@ def _compile(workload: wk.Workload) -> list[tuple[int, tuple]]:
             events.append((idx, ("alloc", step.name, step.nbytes)))
             for h in pre.pop(step.name, ()):
                 events.append((idx, ("advise", step.name,
-                                     _ADVISE_KIND[h.directive.advise])))
+                                     _ADVISE_KIND[h.directive.advise],
+                                     _advise_detail(h.directive))))
         else:
             events.append((idx, ("use", step.name, "host write")))
         idx += 1
@@ -236,11 +367,13 @@ def _compile(workload: wk.Workload) -> list[tuple[int, tuple]]:
     for name, hints in pre.items():
         for h in hints:
             events.append((-1, ("advise", name,
-                                _ADVISE_KIND[h.directive.advise])))
+                                _ADVISE_KIND[h.directive.advise],
+                                _advise_detail(h.directive))))
     staging = idx          # the staging point carries the setup-end index
     for h in workload.advises_at(wk.POST_INIT):
         events.append((staging, ("advise", h.name,
-                                 _ADVISE_KIND[h.directive.advise])))
+                                 _ADVISE_KIND[h.directive.advise],
+                                 _advise_detail(h.directive))))
     for name in workload.prefetch:
         events.append((staging, ("prefetch", name)))
     for step in workload.compute:
@@ -302,14 +435,24 @@ def _structural(workload: wk.Workload) -> list[Finding]:
 
 
 def lint_workload(workload: wk.Workload, *, capacity: int | None = None,
-                  expect_oversubscription: bool = False) -> list[Finding]:
+                  expect_oversubscription: bool = False,
+                  strategy=None, platform=None,
+                  granularity: str = "group") -> list[Finding]:
     """Lint one workload trace.  ``capacity`` (device bytes) plus
     ``expect_oversubscription=True`` arms UML009 for cells whose regime
-    claims eviction pressure."""
+    claims eviction pressure.  ``strategy``/``platform`` (names or
+    objects) arm the context-dependent gate rules UML010/UML011 for one
+    concrete cell; ``granularity`` sizes UML010's chunk rounding."""
     df = _Dataflow()
-    for idx, ev in _compile(workload):
+    events = _compile(workload)
+    for idx, ev in events:
         df.event(idx, ev)
     findings = df.finish(capacity=capacity,
                          expect_oversubscription=expect_oversubscription)
     findings.extend(_structural(workload))
-    return sorted(findings, key=lambda f: (max(f.step_idx, 0), f.rule_id))
+    summary, p = _resolve_cell(strategy, platform)
+    findings.extend(_dead_advise_findings(events, summary, p))
+    findings.extend(_staged_window_findings(workload, summary, p, capacity,
+                                            granularity))
+    return sorted(findings, key=lambda f: (max(f.step_idx, 0), f.rule_id,
+                                           f.region or ""))

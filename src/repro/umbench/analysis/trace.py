@@ -103,11 +103,13 @@ def to_lint_ops(ops) -> list[tuple]:
         elif op.name == "prefetch":
             out.append(("prefetch", op.arg(0)))
         elif op.name == "advise_read_mostly":
-            out.append(("advise", op.arg(0), "read_mostly"))
+            out.append(("advise", op.arg(0), "read_mostly", None))
         elif op.name == "advise_preferred_location":
-            out.append(("advise", op.arg(0), "preferred_location"))
+            out.append(("advise", op.arg(0), "preferred_location",
+                        getattr(op.arg(1), "name", None)))
         elif op.name == "advise_accessed_by":
-            out.append(("advise", op.arg(0), "accessed_by"))
+            out.append(("advise", op.arg(0), "accessed_by",
+                        getattr(op.arg(1), "name", None)))
         else:
             # host I/O, unadvises, counters, explicit staging: generic
             # region references for the lifetime rules
@@ -117,11 +119,14 @@ def to_lint_ops(ops) -> list[tuple]:
 
 def record_serving_ops(pattern="poisson_short", strategy="um",
                        platform="p9-volta-nvlink", regime="kv_150",
-                       granularity: str = "group", config=None) -> list[tuple]:
+                       granularity: str = "group", config=None,
+                       raw: bool = False) -> list:
     """Run one serving cell through a recording proxy and return the
-    lint-ready op stream.  Mirrors ``serving.sweep.run_serving_cell``'s
-    sizing and salting exactly (same pattern trace, same budgets), minus
-    the metrics layer."""
+    lint-ready op stream (or, with ``raw=True``, the unnormalized
+    :class:`Op` records — the form ``analysis.bounds.ops_bounds``
+    replays).  Mirrors ``serving.sweep.run_serving_cell``'s sizing and
+    salting exactly (same pattern trace, same budgets), minus the
+    metrics layer."""
     from repro.core.simulator import OversubscriptionError, UMSimulator
     from repro.umbench import platforms as plat
     from repro.umbench import variants as var
@@ -145,4 +150,4 @@ def record_serving_ops(pattern="poisson_short", strategy="um",
               config or ServingConfig())
     except OversubscriptionError:
         pass    # explicit under KV oversubscription: lint the partial trace
-    return to_lint_ops(rec.ops)
+    return rec.ops if raw else to_lint_ops(rec.ops)

@@ -30,7 +30,7 @@ def make_workload(kind: str):
     def workload(total_bytes: float, iters: int = ITERS) -> Workload:
         w = WorkloadBuilder(kind)
         names = ("img", "kern_img", "freq_img", "freq_kern", "out")
-        for nm, f in zip(names, fr):
+        for nm, f in zip(names, fr, strict=True):
             w.alloc(nm, int(total_bytes * f), role="conv")
         w.host_write("img")
         w.host_write("kern_img")

@@ -130,9 +130,11 @@ class CellResult:
     error: str | None = None      # per-cell failure record (timeout/crash/
     #                               exception); report is None when set
     error_kind: str | None = None  # analysis tag on the failure: "lint"
-    #                                (static findings blocked the run) or
-    #                                "audit" (AuditError mid-run); None for
-    #                                ordinary timeouts/crashes
+    #                                (static findings blocked the run),
+    #                                "audit" (AuditError mid-run), or
+    #                                "bounds" (measured counters outside
+    #                                their provable static bracket); None
+    #                                for ordinary timeouts/crashes
 
     @property
     def total_s(self) -> float | None:
@@ -222,7 +224,7 @@ def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
              platform: SimPlatform | str, regime: str,
              granularity: str = "group", faults=None,
              timeout_s: float | None = None, lint: bool = False,
-             audit: bool = False) -> CellResult:
+             audit: bool = False, bounds: bool = False) -> CellResult:
     """Run one matrix cell: lower ``workload`` through ``strategy`` onto a
     fresh simulator.  ``workload``/``strategy``/``platform`` accept either
     objects or registry names; a string workload is sized to the regime's
@@ -237,6 +239,10 @@ def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
     ``audit=True`` runs the simulator with the engine invariant audit armed;
     an :class:`~repro.umbench.analysis.audit.AuditError` becomes a failure
     record with ``error_kind="audit"``.
+    ``bounds=True`` cross-checks a clean report against the cell's static
+    transfer bounds (``analysis.bounds``, DESIGN.md §16); a measurement
+    outside its provable bracket becomes a failure record with
+    ``error_kind="bounds"`` — the engine, not the workload, is the suspect.
     ``timeout_s`` bounds the cell's wall clock.  Registry-resolution errors
     (unknown names) still raise — they are caller bugs — but any failure
     *executing* the cell (timeout included) returns a CellResult carrying
@@ -289,6 +295,15 @@ def run_cell(workload: Workload | str, strategy: "var.VariantStrategy | str",
     except Exception as e:  # noqa: BLE001 — the per-cell failure record
         report = None
         error = f"{type(e).__name__}: {e}"
+    if bounds and report is not None and scenario is None:
+        from repro.umbench.analysis.bounds import workload_bounds
+        b = workload_bounds(workload, strat, p, granularity)
+        errs = (["cell has a report but bounds say N/A"] if b is None
+                else b.check(report))
+        if errs:
+            report = None
+            error = "bounds: " + "; ".join(errs)
+            error_kind = "bounds"
     return CellResult(workload.name, p.name, strat.name, regime, report,
                       granularity, fname, error, error_kind)
 
@@ -313,6 +328,22 @@ def _failure_cell(spec: tuple, reason: str) -> CellResult:
     app, pname, vname, regime, granularity, fname, _ = _spec_fields(spec)
     return CellResult(app, pname, vname, regime, None, granularity, fname,
                       reason)
+
+
+def bounds_failure(cell: CellResult) -> CellResult | None:
+    """The standard matrix-cell ``verify=`` hook for :func:`run_specs`:
+    cross-check a clean cell against its static transfer bounds
+    (``analysis.bounds.verify_cell``) and return a replacement
+    ``error_kind="bounds"`` failure record when the measurement falls
+    outside its provable bracket — None when the cell passes (or is not
+    checkable: failure records, N/A cells, fault-injected cells)."""
+    from repro.umbench.analysis.bounds import verify_cell
+    errs = verify_cell(cell)
+    if not errs:
+        return None
+    return CellResult(cell.app, cell.platform, cell.variant, cell.regime,
+                      None, cell.granularity, cell.faults,
+                      "bounds: " + "; ".join(errs), "bounds")
 
 
 def _run_cell_spec(spec: tuple) -> CellResult:
@@ -377,7 +408,7 @@ def _plan_batches(pending: list[int], specs: dict[int, tuple],
 def run_specs(specs: list[tuple], workers: int | None = None,
               retries: int = 2, retry_backoff_s: float = 0.5,
               journal=None, runner=None, failure=None,
-              cache=None, fingerprint=None) -> list[CellResult]:
+              cache=None, fingerprint=None, verify=None) -> list[CellResult]:
     """Run a list of cell specs (5- or 7-tuples, see ``_run_cell_spec``),
     returning results in spec order.
 
@@ -408,12 +439,27 @@ def run_specs(specs: list[tuple], workers: int | None = None,
     unchanged, and fresh results (plus journal replays) are recorded back.
     ``fingerprint(spec) -> str`` computes the input hash — the default is
     the matrix-cell ``cellcache.spec_fingerprint``.
+
+    ``verify(cell) -> CellResult | None`` cross-checks every result on the
+    parent side — fresh runs, journal replays, and cache hits alike, so a
+    replayed cell is re-verified for free.  A non-None return *replaces*
+    the cell (the hook demotes it to a failure record, e.g.
+    :func:`bounds_failure`'s ``error_kind="bounds"``); replacements are
+    journaled and never cached (the cache drops error records), so a
+    resumed sweep retries them.
     """
     runner = _run_cell_spec if runner is None else runner
     failure = _failure_cell if failure is None else failure
     if cache is not None and fingerprint is None:
         from repro.umbench.cellcache import spec_fingerprint
         fingerprint = spec_fingerprint
+
+    def _verified(cell: CellResult) -> CellResult:
+        if verify is None:
+            return cell
+        bad = verify(cell)
+        return cell if bad is None else bad
+
     results: dict[int, CellResult] = {}
     pending: list[int] = []
     fps: dict[int, str] = {}
@@ -422,18 +468,19 @@ def run_specs(specs: list[tuple], workers: int | None = None,
             fps[i] = fingerprint(s)
         cached = journal.lookup(_spec_key(s)) if journal is not None else None
         if cached is not None:
-            results[i] = cached
+            results[i] = _verified(cached)
             if cache is not None:
-                cache.record(cached, fps[i])    # converge cache on resume
+                cache.record(results[i], fps[i])  # converge cache on resume
             continue
         if cache is not None:
             hit = cache.lookup(_spec_key(s), fps[i])
             if hit is not None:
-                results[i] = hit
+                results[i] = _verified(hit)
                 continue
         pending.append(i)
 
     def _done(i: int, cell: CellResult) -> None:
+        cell = _verified(cell)
         results[i] = cell
         if journal is not None:
             journal.ran += 1
@@ -476,7 +523,7 @@ def run_specs(specs: list[tuple], workers: int | None = None,
                             cells = [failure(rspecs[i],
                                              f"{type(e).__name__}: {e}")
                                      for i in b]
-                        for i, cell in zip(b, cells):
+                        for i, cell in zip(b, cells, strict=True):
                             _done(i, cell)
             else:
                 # retry casualties one per single-worker pool: a cell that
@@ -517,7 +564,7 @@ def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
                workers: int | None = None, faults=None,
                cell_timeout_s: float | None = None,
                retries: int = 2, retry_backoff_s: float = 0.5,
-               journal=None, cache=None) -> list[CellResult]:
+               journal=None, cache=None, verify=None) -> list[CellResult]:
     """Run the experiment matrix; ``workers`` > 1 fans the independent cells
     out over a process pool (cells are returned in matrix order either way).
     ``faults``/``cell_timeout_s``/``retries``/``journal`` plug in the §12
@@ -530,12 +577,13 @@ def run_matrix(apps=None, platform_names=DEFAULT_PLATFORMS,
         specs = [s + (faults, cell_timeout_s) for s in specs]
     return run_specs(specs, workers=workers, retries=retries,
                      retry_backoff_s=retry_backoff_s, journal=journal,
-                     cache=cache)
+                     cache=cache, verify=verify)
 
 
 def run_extended_matrix(workers: int | None = None,
                         granularity: str = "group",
-                        journal=None, cache=None) -> list[CellResult]:
+                        journal=None, cache=None,
+                        verify=None) -> list[CellResult]:
     """The seed matrix plus the Grace-Hopper platform, the 200 % regime, and
     the beyond-paper variant tiers (svm_remote and um_hybrid_counters are
     N/A on platforms without a coherent fabric; um_pinned_zero_copy needs
@@ -544,18 +592,18 @@ def run_extended_matrix(workers: int | None = None,
                       regimes=EXTENDED_REGIMES,
                       variants=EXTENDED_VARIANTS,
                       granularity=granularity, workers=workers,
-                      journal=journal, cache=cache)
+                      journal=journal, cache=cache, verify=verify)
 
 
 def run_page_matrix(workers: int | None = None,
-                    journal=None, cache=None) -> list[CellResult]:
+                    journal=None, cache=None, verify=None) -> list[CellResult]:
     """The full extended matrix at 64 KB system-page granularity — the
     regime where fault counts explode (Fig. 7c/8c) and where chunk state is
     ~400k-1.5M pages per region on 96 GB platforms.  Routinely runnable
     since the incremental residency index / run-coalescing rewrite
     (DESIGN.md §9); wall time is tracked in BENCH_umbench.json."""
     return run_extended_matrix(workers=workers, granularity="page",
-                               journal=journal, cache=cache)
+                               journal=journal, cache=cache, verify=verify)
 
 
 def default_workers() -> int:

@@ -100,14 +100,22 @@ def run_serving_cell(pattern, strategy, platform, regime: str,
                      granularity: str = "group", faults=None,
                      timeout_s: float | None = None,
                      config: ServingConfig | None = None,
-                     audit: bool = False) -> ServingCellResult:
+                     audit: bool = False,
+                     bounds: bool = False) -> ServingCellResult:
     """Run one serving cell: generate the (cell-salted) trace, drive the
     continuous-batching scheduler through ``strategy`` on a fresh simulator,
     and aggregate per-request metrics.  Mirrors ``harness.run_cell``'s
     contract: registry names or objects, N/A on the platform gate and on
     explicit-under-oversubscription, failure records for timeouts and
     in-cell exceptions; ``audit=True`` arms the engine invariant audit
-    (failures tagged ``error_kind="audit"``)."""
+    (failures tagged ``error_kind="audit"``).
+
+    ``bounds=True`` records the scheduler's op stream in-cell (a
+    ``analysis.trace.RecordingSim`` wrap — the recorded run stays
+    bit-identical) and cross-checks the clean report's transfer counters
+    against the stream's static bounds (``analysis.bounds.ops_bounds``,
+    DESIGN.md §16); a measurement outside its provable bracket becomes an
+    ``error_kind="bounds"`` failure record."""
     p = plat.PLATFORMS[platform] if isinstance(platform, str) else platform
     strat = (var.get_strategy(strategy) if isinstance(strategy, str)
              else strategy)
@@ -128,11 +136,17 @@ def run_serving_cell(pattern, strategy, platform, regime: str,
     if scenario is not None and scenario.enabled():
         sim.set_fault_injector(fl.FaultInjector(scenario, salt))
     requests = pat.generate(salt=salt)
+    rec = None
+    driven = sim
+    if bounds and scenario is None:
+        from repro.umbench.analysis.trace import RecordingSim
+        rec = RecordingSim(sim)
+        driven = rec
     error = None
     error_kind = None
     try:
         with _cell_deadline(timeout_s):
-            sched = serve(sim, strat, requests, kv_frac, cfg)
+            sched = serve(driven, strat, requests, kv_frac, cfg)
             report = summarize(pat.name, cfg.arch, sched.served,
                                len(requests), sched.n_decode_steps,
                                sim.finish())
@@ -148,6 +162,15 @@ def run_serving_cell(pattern, strategy, platform, regime: str,
     except Exception as e:  # noqa: BLE001 — the per-cell failure record
         report = None
         error = f"{type(e).__name__}: {e}"
+    if rec is not None and report is not None:
+        from repro.umbench.analysis.bounds import ops_bounds
+        b = ops_bounds(rec.ops, strat, p, granularity)
+        errs = (["cell has a report but bounds say N/A"] if b is None
+                else b.check(report.sim))
+        if errs:
+            report = None
+            error = "bounds: " + "; ".join(errs)
+            error_kind = "bounds"
     return ServingCellResult(app, p.name, strat.name, regime, report,
                              granularity, fname, error, error_kind)
 
@@ -160,6 +183,17 @@ def _run_serving_cell_spec(spec: tuple) -> ServingCellResult:
     timeout_s = spec[6] if len(spec) > 6 else None
     return run_serving_cell(app, variant, pname, regime, granularity,
                             faults=faults, timeout_s=timeout_s)
+
+
+def _run_serving_cell_spec_bounds(spec: tuple) -> ServingCellResult:
+    """The bounds-checking runner (``run_serving_specs(bounds=True)``):
+    in-worker op recording + static cross-check, so the verification rides
+    the pool instead of serializing on the parent."""
+    app, pname, variant, regime, granularity = spec[:5]
+    faults = spec[5] if len(spec) > 5 else None
+    timeout_s = spec[6] if len(spec) > 6 else None
+    return run_serving_cell(app, variant, pname, regime, granularity,
+                            faults=faults, timeout_s=timeout_s, bounds=True)
 
 
 def _serving_failure_cell(spec: tuple, reason: str) -> ServingCellResult:
@@ -189,13 +223,18 @@ def serving_specs(patterns, platform_names, regimes,
 
 def run_serving_specs(specs: list[tuple], workers: int | None = None,
                       retries: int = 2, retry_backoff_s: float = 0.5,
-                      journal=None, cache=None) -> list[ServingCellResult]:
+                      journal=None, cache=None,
+                      bounds: bool = False) -> list[ServingCellResult]:
     """``harness.run_specs`` with the serving runner plugged in: same
     journaling, worker-crash isolation, retry, and cell-cache semantics
-    (the serving input fingerprint hashes the cell-salted request trace)."""
+    (the serving input fingerprint hashes the cell-salted request trace).
+    ``bounds=True`` swaps in the bounds-checking runner — fresh cells are
+    statically cross-checked in-worker (see ``run_serving_cell``)."""
     from repro.umbench.cellcache import serving_spec_fingerprint
+    runner = (_run_serving_cell_spec_bounds if bounds
+              else _run_serving_cell_spec)
     return run_specs(specs, workers=workers, retries=retries,
                      retry_backoff_s=retry_backoff_s, journal=journal,
-                     runner=_run_serving_cell_spec,
+                     runner=runner,
                      failure=_serving_failure_cell,
                      cache=cache, fingerprint=serving_spec_fingerprint)

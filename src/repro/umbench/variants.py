@@ -79,10 +79,36 @@ matrix — no app changes required (DESIGN.md §8).
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core.advise import Advise, AdvisePolicy, MemorySpace
 from repro.core.simulator import SimPlatform, UMSimulator
 
 from repro.umbench import workload as wk
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySummary:
+    """What a strategy *provably* does, for static analysis (umbound,
+    DESIGN.md §16): the abstract interpreter and the context-armed lint
+    rules (UML010/011) read this instead of sniffing class names.
+
+    ``kind`` partitions the registry by data-motion model:
+
+    * ``"explicit"`` — cudaMalloc/cudaMemcpy staging; no faults ever;
+    * ``"migrate"``  — on-demand UM migration (possibly advised/prefetched);
+    * ``"remote"``   — host-pinned zero-copy / SVM: no migration at all, so
+      faults, HtoD/DtoH migration bytes, and evictions are exactly zero;
+    * ``"hybrid"``   — access-counter promotion: remote until the per-chunk
+      counter crosses ``counter_threshold``, migrating after.
+    """
+
+    name: str
+    kind: str                        # explicit | migrate | remote | hybrid
+    issues_advises: bool = False
+    prefetch: str = "none"           # none | staged | pipelined
+    adaptive: bool = False           # sheds advises / suspends windows on thrash
+    counter_threshold: float | None = None
 
 
 class VariantStrategy:
@@ -94,6 +120,12 @@ class VariantStrategy:
     def available(self, platform: SimPlatform) -> bool:
         """Whether this memory model exists on ``platform`` (False => N/A)."""
         return True
+
+    def static_summary(self) -> StrategySummary:
+        """This strategy's provable data-motion summary (computed fresh —
+        never stored on the instance, which the cell cache fingerprints)."""
+        return StrategySummary(self.name, "migrate",
+                               issues_advises=self.uses_advises)
 
     # -- the lowering template -------------------------------------------------
     def lower(self, workload: wk.Workload, sim: UMSimulator) -> None:
@@ -203,6 +235,9 @@ class UMStrategy(VariantStrategy):
 class ExplicitStrategy(VariantStrategy):
     name = "explicit"
 
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "explicit")
+
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         for nm in workload.host_written():
             sim.explicit_copy_to_device(nm)
@@ -258,6 +293,11 @@ class UMAdviseStrategy(VariantStrategy):
 class UMPrefetchStrategy(VariantStrategy):
     name = "um_prefetch"
 
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "migrate",
+                               issues_advises=self.uses_advises,
+                               prefetch="staged")
+
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         for nm in workload.prefetch:
             sim.prefetch(nm)
@@ -268,6 +308,10 @@ class UMPrefetchStrategy(VariantStrategy):
 
 class UMBothStrategy(UMAdviseStrategy):
     name = "um_both"
+
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "migrate", issues_advises=True,
+                               prefetch="staged")
 
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         super().stage(sim, workload)
@@ -343,6 +387,12 @@ class UMPrefetchPipelinedStrategy(PipelinedScheduleMixin, VariantStrategy):
         self.lookahead = lookahead
         self.staged = staged
 
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "migrate",
+                               issues_advises=self.uses_advises,
+                               prefetch="staged" if self.staged
+                               else "pipelined")
+
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         self.issue_staging(sim, workload)
 
@@ -362,6 +412,11 @@ class UMBothPipelinedStrategy(PipelinedScheduleMixin, UMAdviseStrategy):
         super().__init__(policy)
         self.lookahead = lookahead
         self.staged = staged
+
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "migrate", issues_advises=True,
+                               prefetch="staged" if self.staged
+                               else "pipelined")
 
     def stage(self, sim: UMSimulator, workload: wk.Workload) -> None:
         UMAdviseStrategy.stage(self, sim, workload)
@@ -383,6 +438,9 @@ class SVMRemoteStrategy(VariantStrategy):
 
     def available(self, platform: SimPlatform) -> bool:
         return platform.host_can_access_device and platform.device_can_access_host
+
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "remote")
 
     def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
         sim.advise_preferred_location(step.name, MemorySpace.HOST)
@@ -410,6 +468,10 @@ class UMHybridCountersStrategy(VariantStrategy):
         # access counters ride the coherent fabric (GH C2C, P9 ATS)
         return platform.host_can_access_device and platform.device_can_access_host
 
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "hybrid",
+                               counter_threshold=self.threshold)
+
     def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
         sim.advise_preferred_location(step.name, MemorySpace.HOST)
         sim.enable_access_counters(step.name, self.threshold)
@@ -428,6 +490,9 @@ class UMPinnedZeroCopyStrategy(VariantStrategy):
 
     def available(self, platform: SimPlatform) -> bool:
         return platform.device_can_access_host
+
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "remote")
 
     def on_alloc(self, sim: UMSimulator, step: wk.Alloc) -> None:
         sim.advise_preferred_location(step.name, MemorySpace.HOST)
@@ -449,6 +514,10 @@ class UMAdaptiveAdviseStrategy(UMAdviseStrategy):
     """
 
     name = "um_adaptive_advise"
+
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "migrate", issues_advises=True,
+                               adaptive=True)
 
     def before_step(self, sim: UMSimulator, workload: wk.Workload,
                     idx: int, step: wk.ComputeStep) -> None:
@@ -482,6 +551,11 @@ class UMPrefetchAdaptiveStrategy(UMPrefetchPipelinedStrategy):
     ``um_prefetch_pipelined`` whenever thrash never triggers."""
 
     name = "um_prefetch_adaptive"
+
+    def static_summary(self) -> StrategySummary:
+        return StrategySummary(self.name, "migrate",
+                               prefetch="staged" if self.staged
+                               else "pipelined", adaptive=True)
 
     def before_step(self, sim: UMSimulator, workload: wk.Workload,
                     idx: int, step: wk.ComputeStep) -> None:

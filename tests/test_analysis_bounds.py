@@ -1,0 +1,285 @@
+"""umbound (DESIGN.md §16): the symbolic residency abstract interpreter's
+bounds provably bracket the engine's measured counters.
+
+Three layers:
+
+* randomized-trace property suite — seeded workload families swept across
+  every registered strategy x both granularities must land inside their
+  derived brackets (tests/_seeds.py carries the repro knob);
+* deliberately-broken engines — a monkeypatched counter regression is
+  caught by the ``bounds=True`` gate as ``error_kind="bounds"`` (the class
+  of bug bit-parity sampling between two engine builds cannot see, since
+  both builds share the bug);
+* plumbing — bounds failures flow through run_cell -> journal ->
+  benchmarks cell_deltas exactly like lint/audit failures.
+"""
+import dataclasses
+import json
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from _seeds import seed_note, seeded_rng
+from repro.umbench import harness
+from repro.umbench import platforms as plat
+from repro.umbench.analysis import workload_bounds
+from repro.umbench.variants import get_strategy, strategy_names
+from repro.umbench.workload import WorkloadBuilder
+
+MB = 1 << 20
+GB = 1 << 30
+
+#: small-capacity clones of a PCIe and a coherent platform, so randomized
+#: traces of a few dozen MB exercise both the exact (in-memory) and the
+#: widened (eviction-pressure) abstract phases in milliseconds
+TINY_PASCAL = dataclasses.replace(
+    plat.PLATFORMS["intel-pascal-pcie"], name="tiny-pascal",
+    device_mem_gb=64 / 1024)
+TINY_P9 = dataclasses.replace(
+    plat.PLATFORMS["p9-volta-nvlink"], name="tiny-p9",
+    device_mem_gb=64 / 1024)
+
+
+def random_workload(rng, case):
+    """One random but structurally-valid trace: ragged region sizes (odd
+    bytes exercise the remainder chunk), optional prefetch pool and
+    advises, random kernel read/write sets, a possible mid-trace free."""
+    wb = WorkloadBuilder(f"rand{case}")
+    names = [f"r{i}" for i in range(rng.randint(2, 5))]
+    for n in names:
+        wb.alloc(n, rng.randrange(1 * MB, 48 * MB))
+        if rng.random() < 0.8:
+            wb.host_write(n)
+    pool = [n for n in names if rng.random() < 0.5]
+    if pool:
+        wb.prefetch(*pool)
+    for n in names:
+        if rng.random() < 0.3:
+            wb.advise_read_mostly(n)
+    live = list(names)
+    for k in range(rng.randint(3, 6)):
+        reads = [n for n in live if rng.random() < 0.7] or [rng.choice(live)]
+        writes = [n for n in live if rng.random() < 0.3]
+        wb.kernel(f"k{k}", flops=1e9, reads=reads, writes=writes)
+        if len(live) > 2 and rng.random() < 0.25:
+            victim = live.pop(rng.randrange(len(live)))
+            wb.free(victim)
+    wb.readback(live[-1])
+    return wb.build()
+
+
+@pytest.mark.parametrize("case", range(6))
+@pytest.mark.parametrize("p", [TINY_PASCAL, TINY_P9],
+                         ids=lambda p: p.name)
+def test_bounds_bracket_measured_on_random_traces(case, p):
+    """Every registered strategy x both granularities: the measured
+    counters of a random trace land inside the derived bracket (or both
+    the run and the bounds agree the cell is N/A)."""
+    w = random_workload(seeded_rng(case * 7 + (p.name == "tiny-p9")), case)
+    for strat in strategy_names():
+        for gran in ("group", "page"):
+            cell = harness.run_cell(w, strat, p, "oversubscribed",
+                                    granularity=gran)
+            b = workload_bounds(w, strat, p, gran)
+            if cell.report is None:
+                assert cell.error is None and b is None, (
+                    strat, gran, cell.error, seed_note(case))
+                continue
+            assert b is not None, (strat, gran, seed_note(case))
+            errs = b.check(cell.report)
+            assert errs == [], (strat, gran, errs, seed_note(case))
+
+
+@given(nbytes=st.integers(min_value=1, max_value=256 * MB),
+       nkernels=st.integers(min_value=1, max_value=4))
+@settings(max_examples=25, deadline=None)
+def test_bounds_bracket_measured_hypothesis(nbytes, nkernels):
+    """Hypothesis-driven single-region slice of the property (collected as
+    a skip placeholder when hypothesis is absent — the runtime image does
+    not ship it)."""
+    wb = WorkloadBuilder("hyp")
+    wb.alloc("a", nbytes).host_write("a").prefetch("a")
+    for k in range(nkernels):
+        wb.kernel(f"k{k}", flops=1e9, reads=["a"],
+                  writes=["a"] if k % 2 else [])
+    w = wb.build()
+    for strat in ("um", "um_prefetch", "um_advise"):
+        cell = harness.run_cell(w, strat, TINY_PASCAL, "oversubscribed")
+        b = workload_bounds(w, strat, TINY_PASCAL, "group")
+        if cell.report is not None:
+            assert b is not None and b.check(cell.report) == []
+
+
+# -- bracket semantics ----------------------------------------------------------
+
+def test_in_memory_migrating_cell_is_exact():
+    """Pre-pressure traces never flip to the widened phase: the bracket
+    degenerates to point intervals and tightness is exactly 1.0."""
+    cell = harness.run_cell("bs", "um", "intel-pascal-pcie", "in_memory")
+    p = plat.PLATFORMS["intel-pascal-pcie"]
+    w = harness.WORKLOADS["bs"](harness.REGIMES["in_memory"]
+                                * p.device_mem_gb * GB)
+    b = workload_bounds(w, "um", p, "group")
+    assert b.exact
+    for lo, hi in b.quantities().values():
+        assert lo == hi
+    assert b.check(cell.report) == []
+    tight = b.tightness(cell.report)
+    assert all(v == 1.0 for v in tight.values() if v is not None)
+
+
+def test_bounds_none_when_cell_is_na():
+    """A strategy gated off the platform has no bounds — mirroring the
+    harness's N/A cell — and an explicit tier that would raise
+    OversubscriptionError is equally uncheckable."""
+    gated = [(v, p) for v in strategy_names()
+             for p in plat.PLATFORMS.values()
+             if not get_strategy(v).available(p)]
+    assert gated, "gate table unexpectedly empty"
+    for v, p in gated[:3]:
+        w = harness.WORKLOADS["bs"](0.5 * p.device_mem_gb * GB)
+        assert workload_bounds(w, v, p, "group") is None
+    p = plat.PLATFORMS["intel-pascal-pcie"]
+    w = harness.WORKLOADS["bs"](1.5 * p.device_mem_gb * GB)
+    assert workload_bounds(w, "explicit", p, "group") is None
+
+
+def test_check_reports_each_violated_quantity():
+    """check() names every quantity outside its bracket; tightness()
+    divides upper bound by measurement (None when measured is 0 under a
+    nonzero bound)."""
+    p = plat.PLATFORMS["intel-pascal-pcie"]
+    w = harness.WORKLOADS["bs"](harness.REGIMES["in_memory"]
+                                * p.device_mem_gb * GB)
+    b = workload_bounds(w, "um", p, "group")
+    cell = harness.run_cell("bs", "um", "intel-pascal-pcie", "in_memory")
+    crooked = dataclasses.replace(cell.report,
+                                  n_faults=cell.report.n_faults + 7,
+                                  htod_bytes=cell.report.htod_bytes + 1)
+    errs = b.check(crooked)
+    assert [e.split("=")[0] for e in errs] == ["n_faults", "htod_bytes"]
+    assert all("outside" in e for e in errs)
+
+
+# -- deliberately-broken engines ------------------------------------------------
+
+def test_broken_fault_accounting_is_caught(monkeypatch):
+    """An engine build that undercounts fault events (here: the batched
+    event counter stubbed to zero) measures n_faults below the provable
+    lower bound — run_cell(bounds=True) refuses the cell.  Both builds of
+    a bit-parity A/B would share this bug; the static bracket does not."""
+    from repro.core.simulator import UMSimulator
+    monkeypatch.setattr(UMSimulator, "_n_fault_events",
+                        lambda self, r, ids: 0)
+    cell = harness.run_cell("bs", "um", "intel-pascal-pcie", "in_memory",
+                            bounds=True)
+    assert cell.report is None
+    assert cell.error_kind == "bounds"
+    assert "n_faults" in cell.error
+
+
+def test_broken_transfer_accounting_is_caught(monkeypatch):
+    """A systematic htod over-count (every explicit staging copy billed
+    twice) lands outside the exact bracket on the explicit tier."""
+    from repro.core.simulator import UMSimulator
+    orig = UMSimulator.explicit_copy_to_device
+
+    def double_billed(self, name):
+        out = orig(self, name)
+        self.report.htod_bytes += 1 * MB
+        return out
+
+    monkeypatch.setattr(UMSimulator, "explicit_copy_to_device",
+                        double_billed)
+    cell = harness.run_cell("bs", "explicit", "intel-pascal-pcie",
+                            "in_memory", bounds=True)
+    assert cell.report is None
+    assert cell.error_kind == "bounds"
+    assert "htod_bytes" in cell.error
+
+
+def test_clean_engine_passes_the_gate():
+    cell = harness.run_cell("bs", "um", "intel-pascal-pcie", "in_memory",
+                            bounds=True)
+    assert cell.error is None and cell.error_kind is None
+    assert cell.report is not None
+
+
+# -- harness / journal / benchmarks plumbing ------------------------------------
+
+def test_bounds_failure_hook_replaces_bad_cells():
+    """bounds_failure (the run_specs verify= hook) passes clean cells
+    through as None and converts a tampered report into a failure
+    record carrying the cell key."""
+    cell = harness.run_cell("bs", "um", "intel-pascal-pcie", "in_memory")
+    assert harness.bounds_failure(cell) is None
+    bad = dataclasses.replace(
+        cell, report=dataclasses.replace(cell.report,
+                                         n_faults=cell.report.n_faults + 9))
+    fail = harness.bounds_failure(bad)
+    assert fail is not None
+    assert fail.error_kind == "bounds" and fail.report is None
+    assert (fail.app, fail.platform, fail.variant, fail.regime) == (
+        cell.app, cell.platform, cell.variant, cell.regime)
+    # failure records and fault-injected cells are not checkable
+    assert harness.bounds_failure(fail) is None
+
+
+def test_run_specs_verify_hook_applied(tmp_path):
+    """run_specs(verify=bounds_failure) re-labels a violating cell at the
+    sweep level and journals it as a failure (so a resume retries it)."""
+    from repro.umbench.journal import SweepJournal
+    specs = [("bs", "intel-pascal-pcie", "um", "in_memory", "group")]
+    clean = harness.run_specs(specs, verify=harness.bounds_failure)
+    assert clean[0].error is None and clean[0].report is not None
+
+    def always_fails(cell):
+        bad = dataclasses.replace(
+            cell, report=dataclasses.replace(
+                cell.report, n_faults=cell.report.n_faults + 9))
+        return harness.bounds_failure(bad)
+
+    jpath = tmp_path / "j.jsonl"
+    with SweepJournal(str(jpath)) as j:
+        out = harness.run_specs(specs, verify=always_fails, journal=j)
+    assert out[0].error_kind == "bounds" and out[0].report is None
+    rec = json.loads(jpath.read_text().strip())
+    assert rec["error_kind"] == "bounds"
+    assert SweepJournal(str(jpath)).completed == {}
+
+
+def test_cell_deltas_labels_bounds_cells_errored_never_changed():
+    from benchmarks.run import cell_deltas
+    row = {"app": "bs", "platform": "intel-pascal-pcie", "variant": "um",
+           "regime": "in_memory", "granularity": "group", "total_s": None,
+           "error": "bounds: n_faults 3 outside [4, 4]",
+           "error_kind": "bounds"}
+    prior = dict(row, total_s=1.0)
+    del prior["error"], prior["error_kind"]
+    d = cell_deltas([prior], [row])
+    assert d["cells_error"] == 1 and d["errored"][0]["error_kind"] == "bounds"
+    assert d["cells_changed"] == 0 and d["changed"] == []
+
+
+# -- serving op-stream path -----------------------------------------------------
+
+def test_serving_cell_bounds_clean_and_violation_caught(monkeypatch):
+    """run_serving_cell(bounds=True): a clean engine passes; an engine
+    whose batched fault counter is broken is refused with
+    error_kind="bounds" (the serving path derives bounds by replaying the
+    recorded op stream, not from a static Workload)."""
+    from repro.core.simulator import UMSimulator
+    from repro.umbench.serving.sweep import run_serving_cell
+    cell = run_serving_cell("poisson_short", "um", "p9-volta-nvlink",
+                            "kv_100", bounds=True)
+    assert cell.error is None and cell.report is not None
+    monkeypatch.setattr(UMSimulator, "_n_fault_events",
+                        lambda self, r, ids: 0)
+    bad = run_serving_cell("poisson_short", "um", "p9-volta-nvlink",
+                           "kv_100", bounds=True)
+    assert bad.report is None and bad.error_kind == "bounds"
+    assert "n_faults" in bad.error

@@ -94,8 +94,100 @@ def test_uml009_oversubscription_unreachable():
 
 
 def test_every_documented_rule_has_a_firing_fixture():
-    covered = {r for r, _ in _fixtures()} | {"UML009"}
+    # UML009-011 need cell context (capacity / strategy / platform); their
+    # firing fixtures are the dedicated tests below
+    covered = ({r for r, _ in _fixtures()}
+               | {"UML009", "UML010", "UML011"})
     assert covered == set(RULES)
+
+
+def _staged_pool_workload(cap, frac=1.4):
+    """Two-region prefetch pool sized to ``frac`` x device capacity."""
+    big = int(cap * frac)
+    return wk.Workload(
+        "staged_pool",
+        (wk.Alloc("A", big // 2), wk.HostWrite("A"),
+         wk.Alloc("B", big - big // 2), wk.HostWrite("B")),
+        (_k("k0", ("A", "B"), ("B",)),), (wk.ReadBack("B"),),
+        prefetch=("A", "B"))
+
+
+def test_uml010_staged_window_exceeds_capacity():
+    """A staged-prefetch strategy copies the whole pool at its anchor; a
+    pool over device capacity provably self-evicts.  The pipelined
+    schedule clamps windows (exempt), and the rule stays silent without
+    strategy/platform context or when the pool fits."""
+    p = plat.PLATFORMS["intel-pascal-pcie"]
+    cap = int(p.device_mem_gb * GB)
+    w = _staged_pool_workload(cap)
+    armed = lint_workload(w, capacity=cap, expect_oversubscription=True,
+                          strategy="um_prefetch", platform=p)
+    assert "UML010" in rule_ids(armed)
+    f = next(x for x in armed if x.rule_id == "UML010")
+    assert f.step_idx == 4 and f.severity == "warning"   # the anchor
+    piped = lint_workload(w, capacity=cap, expect_oversubscription=True,
+                          strategy="um_prefetch_pipelined", platform=p)
+    assert "UML010" not in rule_ids(piped)
+    unarmed = lint_workload(w, capacity=cap, expect_oversubscription=True)
+    assert "UML010" not in rule_ids(unarmed)
+    fits = lint_workload(_staged_pool_workload(cap, frac=0.25), capacity=cap,
+                         strategy="um_prefetch", platform=p)
+    assert "UML010" not in rule_ids(fits)
+
+
+DEAD_ADVISE_OPS = [
+    ("alloc", "x", 4 * MB),
+    ("advise", "x", "accessed_by", "DEVICE"),
+    ("advise", "x", "accessed_by", "HOST"),
+    ("advise", "x", "preferred_location", "HOST"),
+    ("kernel", "k", ("x",), ()),
+    ("free", "x"),
+]
+
+
+def test_uml011_dead_advise_gate_table():
+    """UML011 reads the platform gate table: ACCESSED_BY(DEVICE) is dead
+    everywhere; ACCESSED_BY(HOST) needs host_can_access_device;
+    PREFERRED_LOCATION(HOST) needs device_can_access_host."""
+    import dataclasses
+    pascal = lint_ops(DEAD_ADVISE_OPS, strategy="um_both",
+                      platform="intel-pascal-pcie")
+    hits = [f for f in pascal if f.rule_id == "UML011"]
+    assert [f.step_idx for f in hits] == [1, 2]    # DEVICE + HOST accessor
+    p9 = lint_ops(DEAD_ADVISE_OPS, strategy="um_both",
+                  platform="p9-volta-nvlink")
+    assert [f.step_idx for f in p9 if f.rule_id == "UML011"] == [1]
+    deaf = dataclasses.replace(plat.PLATFORMS["p9-volta-nvlink"],
+                               name="deaf", device_can_access_host=False)
+    custom = lint_ops(DEAD_ADVISE_OPS, strategy="um_both", platform=deaf)
+    assert [f.step_idx for f in custom if f.rule_id == "UML011"] == [1, 3]
+
+
+def test_uml011_unarmed_and_non_advising_silent():
+    """No platform context, a non-advising strategy, or detail-less
+    3-tuple advise events (the pre-ISSUE-10 vocabulary): no UML011."""
+    assert "UML011" not in rule_ids(lint_ops(DEAD_ADVISE_OPS))
+    quiet = lint_ops(DEAD_ADVISE_OPS, strategy="um",
+                     platform="intel-pascal-pcie")
+    assert "UML011" not in rule_ids(quiet)
+    legacy = [("alloc", "x", 4 * MB), ("advise", "x", "read_mostly"),
+              ("kernel", "k", ("x",), ()), ("free", "x")]
+    armed = lint_ops(legacy, strategy="um_both",
+                     platform="intel-pascal-pcie")
+    assert "UML011" not in rule_ids(armed)
+
+
+def test_lint_ops_findings_sorted_by_step_rule_region():
+    """Op-stream findings come back ordered by (step, rule, region) —
+    stable output for diffing lint logs across runs."""
+    ops = [("alloc", "a", 4 * MB), ("alloc", "b", 4 * MB),
+           ("free", "a"), ("free", "b"),
+           ("kernel", "k", ("b", "a"), ())]
+    findings = lint_ops(ops)
+    keys = [(f.step_idx, f.rule_id, f.region or "") for f in findings]
+    assert keys == sorted(keys)
+    uml2 = [f.region for f in findings if f.rule_id == "UML002"]
+    assert uml2 == ["a", "b"]     # region breaks the same-step tie
 
 
 def test_findings_are_ordered_and_printable():
@@ -141,6 +233,44 @@ def test_lint_ops_catches_serving_style_leak():
            ("free", "kv/1/0"),
            ("kernel", "decode", ("kv/1/0",), ())]
     assert "UML002" in rule_ids(lint_ops(ops))
+
+
+# -- CLI exit codes -------------------------------------------------------------
+
+def _fake_pass(findings):
+    return lambda: [("fixture", findings)]
+
+
+def test_cli_exit_codes_split_errors_from_strict_warnings(monkeypatch):
+    """Exit 1 = error findings, exit 2 = strict-armed warnings only,
+    exit 0 = clean (or warnings without --strict) — CI distinguishes
+    broken traces from untidy ones."""
+    from repro.umbench.analysis import __main__ as cli
+    from repro.umbench.analysis.lint import Finding
+    warn = Finding("UML004", "warning", 0, "A", "dead region")
+    err = Finding("UML002", "error", 1, "A", "use after free")
+    monkeypatch.setattr(cli, "lint_all_apps", _fake_pass([warn]))
+    assert cli.main(["--all-apps"]) == 0
+    assert cli.main(["--all-apps", "--strict"]) == 2
+    monkeypatch.setattr(cli, "lint_all_apps", _fake_pass([warn, err]))
+    assert cli.main(["--all-apps"]) == 1
+    assert cli.main(["--all-apps", "--strict"]) == 1
+    monkeypatch.setattr(cli, "lint_all_apps", _fake_pass([]))
+    assert cli.main(["--all-apps"]) == 0
+    assert cli.main(["--all-apps", "--strict"]) == 0
+
+
+def test_cli_serving_warnings_not_strict_fatal(monkeypatch):
+    """Serving-trace warnings are timing artifacts of the request-driven
+    lifecycle: non-fatal even under --strict (errors still fatal)."""
+    from repro.umbench.analysis import __main__ as cli
+    from repro.umbench.analysis.lint import Finding
+    warn = Finding("UML004", "warning", 0, "kv/1/0", "dead region")
+    monkeypatch.setattr(cli, "lint_serving", _fake_pass([warn]))
+    assert cli.main(["--serving", "--strict"]) == 0
+    err = Finding("UML002", "error", 1, "kv/1/0", "use after free")
+    monkeypatch.setattr(cli, "lint_serving", _fake_pass([warn, err]))
+    assert cli.main(["--serving"]) == 1
 
 
 # -- harness / journal / benchmarks integration --------------------------------

@@ -198,6 +198,59 @@ def test_committed_bench_serving_block_and_no_errors():
 
 
 # ---------------------------------------------------------------------------
+# the static-bounds gate held over the whole committed artifact (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def test_committed_bench_bounds_gate_clean():
+    """The committed artifact was generated with the §16 bounds gate armed
+    on the extended, page, and serving sweeps — every checked cell landed
+    inside its provable bracket (a violation would have become an
+    error_kind="bounds" failure record, failing the no-errors gate too)."""
+    with open("BENCH_umbench.json") as f:
+        bench = json.load(f)
+    assert bench["bounds_violations"] == 0
+    assert bench["bounds_checked"] > 0
+    report = bench["bounds_report"]
+    assert set(report) == {"ext", "page", "serving"}
+    for block, tally in report.items():
+        assert tally["violations"] == 0, (block, tally)
+        assert tally["checked"] > 0, (block, tally)
+    assert bench["bounds_checked"] == sum(t["checked"]
+                                          for t in report.values())
+    assert bench["bounds_violations"] == sum(t["violations"]
+                                             for t in report.values())
+    assert "boundstight" in bench["block_wall_s"]
+    # the page sweep's gate runs as its own timed block so the committed
+    # page_matrix_wall_s ceiling keeps measuring the sweep alone
+    assert "pagegate" in bench["block_wall_s"]
+
+
+def test_page_bounds_gate_block_replaces_violations(monkeypatch):
+    """``table_page_bounds_gate`` walks the memoized page sweep
+    parent-side: clean cells tally as checked, a tampered cell is replaced
+    in place with an ``error_kind="bounds"`` failure record (so the BENCH
+    payload, assembled afterwards, carries the failure)."""
+    import dataclasses
+
+    from benchmarks import paper_tables as pt
+    from repro.umbench.harness import run_cell
+    cell = run_cell("bs", "um", "intel-pascal-pcie", "in_memory", "page")
+    assert cell.report is not None and cell.error is None
+    bad = dataclasses.replace(
+        cell, report=dataclasses.replace(cell.report,
+                                         n_faults=cell.report.n_faults + 9))
+    sweep = [cell, bad]
+    monkeypatch.setattr(pt, "_PAGE", sweep)
+    monkeypatch.setitem(pt.BOUNDS_STATS, "page",
+                        {"checked": 0, "violations": 0})
+    rows = pt.table_page_bounds_gate()
+    assert pt.BOUNDS_STATS["page"] == {"checked": 2, "violations": 1}
+    assert sweep[0] is cell
+    assert sweep[1].error_kind == "bounds" and sweep[1].report is None
+    assert rows[-1] == "pagegate,page,2,2,1"
+
+
+# ---------------------------------------------------------------------------
 # cache-hit cells are compared but can never be "changed" (ISSUE 9)
 # ---------------------------------------------------------------------------
 

@@ -98,6 +98,19 @@ def test_cache_miss_reason_table_matches_registry():
         f"stale={sorted(documented - set(MISS_REASONS))}")
 
 
+def test_bounds_quantity_table_matches_registry():
+    """DESIGN.md §16's bounded-quantity table lists exactly the
+    quantities umbound brackets (the ISSUE 10 analogue of the rule-table
+    gate) — the same keys CellBounds.quantities()/check() report on."""
+    from repro.umbench.analysis import QUANTITIES
+    documented = doc_table_names(REPO / "DESIGN.md", "quantity")
+    assert documented, "DESIGN.md: no bounded-quantity table found"
+    assert documented == set(QUANTITIES), (
+        f"DESIGN.md quantity table diverges from bounds.QUANTITIES: "
+        f"undocumented={sorted(set(QUANTITIES) - documented)}, "
+        f"stale={sorted(documented - set(QUANTITIES))}")
+
+
 def test_audit_invariant_table_matches_registry():
     from repro.umbench.analysis import INVARIANTS
     documented = doc_table_names(REPO / "DESIGN.md", "invariant")
